@@ -1,0 +1,85 @@
+"""Fig. 10 / Fig. 11: Bcast and Reduce vs message size, torus vs bus.
+
+Compared: SMI streamed (pipelined chain, the paper's linear scheme),
+host-staged (serial bulk sends — the MPI+OpenCL analogue), and the
+beyond-paper binomial tree.  The paper's observations to reproduce:
+streamed collectives beat staged for all sizes; topology (torus vs bus)
+barely matters for the streamed version; trees win at small sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    Communicator,
+    Topology,
+    make_test_mesh,
+    staged_bcast,
+    staged_reduce,
+    stream_bcast,
+    stream_reduce,
+    tree_bcast,
+    tree_reduce,
+)
+
+from .common import ICI_BW, csv_row, timeit
+
+PP = 8
+
+
+def run():
+    mesh = make_test_mesh((PP,), ("x",))
+    comms = {
+        "torus": Communicator.create("x", (PP,)),
+        "bus": Communicator.create("x", (PP,), topology=Topology.bus(PP)),
+    }
+    out = []
+    for log2_kb in [4, 8, 11]:
+        elems = (1 << log2_kb) * 256
+        x = jnp.ones((PP, elems), jnp.float32)
+        n_chunks = 16
+        mb = elems * 4 / 2**20
+        for topo, comm in comms.items():
+            variants = {
+                "smi": lambda v, c=comm: stream_bcast(
+                    v[0].reshape(n_chunks, -1), c, root=0, n_chunks=n_chunks
+                ).reshape(1, -1),
+                "staged": lambda v, c=comm: staged_bcast(v[0], c, root=0)[None],
+                "tree": lambda v, c=comm: tree_bcast(v[0], c, root=0)[None],
+            }
+            for name, fn in variants.items():
+                f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
+                                          out_specs=P("x")))
+                t = timeit(f, x)
+                if name == "smi":
+                    steps = n_chunks + PP - 2
+                    model = steps * (elems * 4 / n_chunks) / ICI_BW
+                elif name == "staged":
+                    model = sum(
+                        comm.route_table.n_hops(0, d) for d in range(1, PP)
+                    ) * elems * 4 / ICI_BW
+                else:
+                    model = 3 * elems * 4 / ICI_BW  # log2(8) rounds
+                csv_row(f"bcast_fig10,{mb:.2f}MB,{topo},{name}", t * 1e6,
+                        f"v5e_model_us={model * 1e6:.1f}")
+                out.append(("bcast", mb, topo, name, t, model))
+
+            rvariants = {
+                "smi": lambda v, c=comm: stream_reduce(
+                    v[0].reshape(n_chunks, -1), c, root=0, n_chunks=n_chunks
+                ).reshape(1, -1),
+                "staged": lambda v, c=comm: staged_reduce(v[0], c, root=0)[None],
+                "tree": lambda v, c=comm: tree_reduce(v[0], c, root=0)[None],
+            }
+            for name, fn in rvariants.items():
+                f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
+                                          out_specs=P("x")))
+                t = timeit(f, x)
+                csv_row(f"reduce_fig11,{mb:.2f}MB,{topo},{name}", t * 1e6, "")
+                out.append(("reduce", mb, topo, name, t, None))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark harness utilities.
+
+Benchmarks run on 8 host devices (the paper's 8-FPGA testbed size) and
+report wall-time medians of the compiled program plus derived TPU-v5e
+figures from the schedule structure (steps × bytes/link) — this container
+is CPU-only, so absolute wall-times are CPU-relative but *ratios* between
+SMI and baselines mirror the schedule structure the paper measures.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+
+# TPU v5e model constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # B/s
+ICI_BW = 50e9            # B/s per link per direction
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    """Median wall time of a compiled callable (seconds)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

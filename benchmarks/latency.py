@@ -1,0 +1,40 @@
+"""Tab. 3: single-element message latency vs hop count (SMI-1/-4/-7).
+
+The paper measures half round-trip of a ping-pong.  Structurally, SMI
+latency = hops x per-hop cost; the host-staged path pays the full
+PCIe+MPI+PCIe stack once regardless of distance (36.61 us measured there).
+We time a 1-chunk channel across 1/4/7 bus hops and report the v5e model
+(hop cost ≈ 1 us ICI + chunk serialisation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import Communicator, Topology, make_test_mesh, stream_p2p
+
+from .common import ICI_BW, csv_row, timeit
+
+HOP_LAT = 1e-6  # ~1us per ICI hop (v5e-class)
+
+
+def run():
+    mesh = make_test_mesh((8,), ("x",))
+    comm = Communicator.create("x", (8,), topology=Topology.bus(8))
+    elems = 8  # one tiny packet
+    x = jnp.ones((8, elems), jnp.float32)
+    out = []
+    for dst, hops in [(1, 1), (4, 4), (7, 7)]:
+        f = jax.jit(jax.shard_map(
+            lambda v: stream_p2p(v[0], src=0, dst=dst, comm=comm, n_chunks=1)[None],
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+        t = timeit(f, x)
+        model = hops * (HOP_LAT + elems * 4 / ICI_BW)
+        csv_row(f"latency_tab3,hops={hops}", t * 1e6,
+                f"v5e_model_us={model * 1e6:.2f}")
+        out.append((hops, t, model))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Tab. 1 / Tab. 2 analogue: transport-layer "resource" share.
+
+The paper reports SMI's LUT/FF/M20K cost (<2% of the chip).  The TPU
+analogue: the fraction of compiled HLO instructions and wire bytes the SMI
+transport contributes to a real model step.  We compile a small TP model
+step in both comm modes and count collective ops vs total ops — the
+"interconnect logic share" of the program.
+"""
+
+import collections
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch, smoke
+from repro.configs.base import ShapeConfig
+from repro.core import make_test_mesh
+from repro.launch.steps import TrainSettings, build_train
+
+from .common import csv_row
+
+OP_RE = re.compile(r"^\s+\S+ = \S+ (\w[\w-]*)\(", re.M)
+COLL = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute", "collective-permute-start",
+        "all-gather-start", "all-reduce-start"}
+
+
+def run():
+    out = []
+    for mode in ["smi", "bulk"]:
+        cfg = smoke(get_arch("yi-6b"))
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        shape = ShapeConfig("r", seq_len=64, global_batch=4, kind="train")
+        st = TrainSettings(comm_mode=mode, remat="nothing", loss_chunks=1)
+        art = build_train(cfg, mesh, shape, st)
+        batch = {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+            for k, v in art["input_specs"].items()
+        }
+        txt = art["step"].lower(art["state_shape"], batch).compile().as_text()
+        ops = collections.Counter(OP_RE.findall(txt))
+        total = sum(ops.values())
+        coll = sum(v for k, v in ops.items() if k in COLL)
+        pct = 100.0 * coll / max(total, 1)
+        csv_row(f"resources_tab1,{mode}", 0.0,
+                f"collective_ops={coll},total_ops={total},share_pct={pct:.2f}")
+        out.append((mode, coll, total, pct))
+    return out
+
+
+if __name__ == "__main__":
+    run()

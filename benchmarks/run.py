@@ -1,0 +1,53 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Runs on 8 host devices
+(set in benchmarks/common.py before jax init); the production-mesh numbers
+come from launch/dryrun.py + launch/roofline.py instead.
+
+    PYTHONPATH=src python -m benchmarks.run [--only bandwidth,...]
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import common  # noqa: F401  (sets XLA_FLAGS before jax init)
+
+SUITES = [
+    "bandwidth",        # Fig 9
+    "latency",          # Tab 3
+    "injection",        # Tab 4
+    "collectives_bench",  # Fig 10 / Fig 11
+    "gesummv",          # Fig 13
+    "stencil_bench",    # Fig 15 / Fig 16
+    "resources",        # Tab 1 / Tab 2
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of suites")
+    args = ap.parse_args()
+    todo = args.only.split(",") if args.only else SUITES
+    failures = []
+    for name in todo:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}", flush=True)
+    if failures:
+        print(f"# FAILED suites: {failures}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Fig. 15 / Fig. 16: SPMD distributed stencil with SMI halo exchange.
+
+Strong scaling of a 4-point stencil over a fixed domain on 1 / 4 / 8 ranks
+(2D decomposition, N/S/E/W halo channels per paper Fig. 14), plus a weak-
+scaling row.  The distributed result is asserted equal to the single-rank
+sweep — communication correctness included in the benchmark.
+
+Domain reduced from the paper's 4096^2 x 32 steps to CPU-friendly sizes;
+the v5e model column scales per the paper's inequality (§5.4.2).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import Communicator, make_test_mesh
+from repro.core.overlap import halo_exchange_2d
+from repro.kernels import stencil_ref
+
+from .common import HBM_BW, ICI_BW, csv_row, timeit
+
+
+def _sweep_tile(tile_with_halo):
+    """One local sweep given a halo'd tile (paper's shift-register kernel)."""
+    xp = tile_with_halo.astype(jnp.float32)
+    out = 0.25 * (xp[:-2, 1:-1] + xp[2:, 1:-1] + xp[1:-1, :-2] + xp[1:-1, 2:])
+    return out
+
+
+def _dist_stencil(grid, domain, steps):
+    RX, RY = grid
+    n = RX * RY
+    names = ("gx", "gy")
+    mesh = make_test_mesh(grid, names)
+    comm = Communicator.create(names, grid)
+    nx, ny = domain[0] // RX, domain[1] // RY
+
+    def fn(tiles):
+        def body(_, t):
+            padded = halo_exchange_2d(t, comm, grid=grid, halo=(1, 1))
+            return _sweep_tile(padded).astype(t.dtype)
+
+        return jax.lax.fori_loop(0, steps, body, tiles[0])[None]
+
+    f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P(names), out_specs=P(names)))
+    return f, (n, nx, ny)
+
+
+def run():
+    domain = (512, 512)
+    steps = 8
+    rng = np.random.RandomState(0)
+    world = rng.randn(*domain).astype(np.float32)
+
+    # single-rank reference
+    f1 = jax.jit(lambda x: jax.lax.fori_loop(0, steps, lambda _, v: stencil_ref(v), x))
+    t1 = timeit(f1, jnp.asarray(world))
+    want = np.asarray(f1(jnp.asarray(world)))
+
+    out = [("1rank", domain, t1)]
+    csv_row(f"stencil_fig15,{domain[0]}x{domain[1]},ranks=1", t1 * 1e6, "")
+
+    for grid in [(2, 2), (2, 4)]:
+        RX, RY = grid
+        n = RX * RY
+        f, (n_, nx, ny) = _dist_stencil(grid, domain, steps)
+        tiles = np.zeros((n, nx, ny), np.float32)
+        for rx in range(RX):
+            for ry in range(RY):
+                tiles[rx * RY + ry] = world[rx * nx:(rx + 1) * nx,
+                                            ry * ny:(ry + 1) * ny]
+        tj = jnp.asarray(tiles)
+        t = timeit(f, tj)
+        got = np.asarray(f(tj))
+        # reassemble + verify against the single-rank sweep
+        re = np.zeros_like(world)
+        for rx in range(RX):
+            for ry in range(RY):
+                re[rx * nx:(rx + 1) * nx, ry * ny:(ry + 1) * ny] = got[rx * RY + ry]
+        np.testing.assert_allclose(re, want, rtol=1e-5, atol=1e-5)
+        # v5e model: compute/mem per rank shrinks by n; halo comm per rank
+        mem_t = domain[0] * domain[1] * 4 * 2 / n / HBM_BW
+        halo_t = 2 * (nx + ny) * 4 * 2 / ICI_BW
+        model = steps * max(mem_t, halo_t)
+        csv_row(f"stencil_fig15,{domain[0]}x{domain[1]},ranks={n}", t * 1e6,
+                f"v5e_model_us={model * 1e6:.1f}")
+        out.append((f"{n}rank", domain, t))
+
+    # weak scaling (fig 16): fixed per-rank tile
+    for grid in [(2, 2), (2, 4)]:
+        n = grid[0] * grid[1]
+        dom = (256 * grid[0], 256 * grid[1])
+        wrld = rng.randn(*dom).astype(np.float32)
+        f, (_, nx, ny) = _dist_stencil(grid, dom, steps)
+        tiles = np.stack([
+            wrld[rx * nx:(rx + 1) * nx, ry * ny:(ry + 1) * ny]
+            for rx in range(grid[0]) for ry in range(grid[1])
+        ])
+        t = timeit(f, jnp.asarray(tiles))
+        per_pt = t / (dom[0] * dom[1] * steps) * 1e9
+        csv_row(f"stencil_fig16_weak,ranks={n}", t * 1e6,
+                f"ns_per_point={per_pt:.3f}")
+        out.append((f"weak{n}", dom, t))
+    return out
+
+
+if __name__ == "__main__":
+    run()

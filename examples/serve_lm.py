@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests through the ServeEngine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "yi-6b", "--smoke", "--requests", "6",
+          "--max-new", "10", "--slots", "3"])

@@ -1,0 +1,49 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run (dryrun full-step + roofline probe) for a
+cell under a named variant and append the assembled roofline row.
+
+    PYTHONPATH=src python scripts/hillclimb.py <arch> <shape> <variant>
+variants: base | sg (shared_gather) | sg_ra (+ring_attn) | sg_dnb
+          (+remat dots_nb) | ra | sg_ra_dnb
+"""
+
+import json
+import sys
+
+from repro.launch.dryrun import run_cell
+from repro.launch.roofline import analyze_cell
+
+VARIANTS = {
+    "base":      dict(shared_gather=False, ring_attn=False, remat="nothing"),
+    "sg":        dict(shared_gather=True,  ring_attn=False, remat="nothing"),
+    "ra":        dict(shared_gather=False, ring_attn=True,  remat="nothing"),
+    "sg_ra":     dict(shared_gather=True,  ring_attn=True,  remat="nothing"),
+    "sg_dnb":    dict(shared_gather=True,  ring_attn=False, remat="dots_nb"),
+    "sg_ra_dnb": dict(shared_gather=True,  ring_attn=True,  remat="dots_nb"),
+}
+
+
+def main():
+    arch, shape, variant = sys.argv[1], sys.argv[2], sys.argv[3]
+    opts = VARIANTS[variant]
+    rec = run_cell(arch, shape, multi_pod=False, comm_mode="smi",
+                   variant=variant, **opts)
+    assert rec["ok"], rec.get("error")
+    row = analyze_cell(rec, comm_mode="smi",
+                       remat=opts["remat"],
+                       shared_gather=opts["shared_gather"],
+                       ring_attn=opts["ring_attn"])
+    row["temp_gb"] = rec["memory"]["temp_gb"]
+    with open("hillclimb_results.jsonl", "a") as f:
+        f.write(json.dumps(row) + "\n")
+    t = row["terms_s"]
+    print(f"[hillclimb] {arch} {shape} {variant}: "
+          f"comp={t['compute_s']:.4f} mem={t['memory_s']:.4f} "
+          f"coll={t['collective_s']:.4f} dom={row['dominant']} "
+          f"frac={row['roofline_fraction']:.3f} temp={row['temp_gb']}GB")
+
+
+if __name__ == "__main__":
+    main()

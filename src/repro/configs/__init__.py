@@ -1,0 +1,4 @@
+from .base import ModelConfig, ShapeConfig, SHAPES
+from .registry import ARCHS, get_arch, smoke, cells
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_arch", "smoke", "cells"]

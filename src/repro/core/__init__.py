@@ -1,0 +1,78 @@
+"""SMI core: streaming messages for JAX meshes.
+
+The paper's primary contribution — transient channels, a routed transport
+layer with runtime-uploadable tables, and streamed collectives — rendered as
+static ppermute schedules (fast path) plus a dynamic packet router
+(flexibility path) for TPU pods.  See DESIGN.md §2 for the adaptation map.
+"""
+
+from .comm import Communicator, PortAllocator
+from .topology import Topology
+from .routing import (
+    RouteTable,
+    compute_route_table,
+    channel_dependency_acyclic,
+    physical_link_map,
+)
+from .streaming import (
+    Channel,
+    ChannelSpec,
+    open_channel,
+    push,
+    pop,
+    channel_transfer,
+    stream_p2p,
+    stream_exchange,
+    run_spmd,
+    make_test_mesh,
+    pvary,
+)
+from .collectives import (
+    stream_allgather,
+    stream_reduce_scatter,
+    stream_allreduce,
+    stream_alltoall,
+    stream_bcast,
+    stream_reduce,
+    stream_gather,
+    stream_scatter,
+    tree_bcast,
+    tree_reduce,
+    staged_bcast,
+    staged_reduce,
+    make_int8_codec,
+)
+
+__all__ = [
+    "Communicator",
+    "PortAllocator",
+    "Topology",
+    "RouteTable",
+    "compute_route_table",
+    "channel_dependency_acyclic",
+    "physical_link_map",
+    "Channel",
+    "ChannelSpec",
+    "open_channel",
+    "push",
+    "pop",
+    "channel_transfer",
+    "stream_p2p",
+    "stream_exchange",
+    "run_spmd",
+    "make_test_mesh",
+    "pvary",
+    "stream_allgather",
+    "stream_reduce_scatter",
+    "stream_allreduce",
+    "stream_alltoall",
+    "stream_bcast",
+    "stream_reduce",
+    "stream_gather",
+    "stream_scatter",
+    "tree_bcast",
+    "tree_reduce",
+    "staged_bcast",
+    "staged_reduce",
+    "make_int8_codec",
+]

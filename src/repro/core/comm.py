@@ -1,0 +1,115 @@
+"""Communicators (paper §3.1: ranks, ports, communicators).
+
+A :class:`Communicator` binds SMI rank semantics to JAX mesh axes:
+
+* its *ranks* are the devices along one or more named mesh axes, linearised
+  row-major (matching ``lax.axis_index((ax0, ax1, ...))``),
+* its *topology* is the logical connection graph handed to the route
+  generator (defaults to the torus implied by the axis sizes — the physical
+  ICI fabric),
+* *ports* provide independent parallel streams, exactly as the paper's
+  hardware port endpoints; a :class:`PortAllocator` enforces the paper's
+  compile-time-known-ports rule.
+
+All collective / streaming functions in ``core`` take a communicator and must
+be called inside ``jax.shard_map`` over (at least) the communicator's axes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from jax import lax
+
+from .routing import RouteTable, compute_route_table
+from .topology import Topology
+
+
+@dataclass(frozen=True)
+class Communicator:
+    """SMI_Comm: a set of ranks over mesh axes with a routed topology."""
+
+    axis_names: tuple[str, ...]
+    axis_sizes: tuple[int, ...]
+    topology: Topology
+    route_table: RouteTable
+    name: str = "world"
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def create(
+        axis_names,
+        axis_sizes,
+        topology: Topology | None = None,
+        routing_scheme: str = "auto",
+        name: str = "world",
+    ) -> "Communicator":
+        if isinstance(axis_names, str):
+            axis_names = (axis_names,)
+        axis_names = tuple(axis_names)
+        axis_sizes = tuple(int(s) for s in axis_sizes)
+        n = 1
+        for s in axis_sizes:
+            n *= s
+        if topology is None:
+            topology = Topology.torus(axis_sizes)
+        assert topology.n_ranks == n, (
+            f"topology has {topology.n_ranks} ranks but axes {axis_names} give {n}"
+        )
+        rt = compute_route_table(topology, scheme=routing_scheme)
+        return Communicator(axis_names, axis_sizes, topology, rt, name=name)
+
+    def with_topology(self, topology: Topology, routing_scheme: str = "auto") -> "Communicator":
+        """Re-route over a new logical topology *without* changing the program
+        structure — the paper's 'recompute routes, keep the bitstream'."""
+        rt = compute_route_table(topology, scheme=routing_scheme)
+        return replace(self, topology=topology, route_table=rt)
+
+    # -- rank queries (trace-time inside shard_map) --------------------------
+
+    @property
+    def size(self) -> int:
+        return self.topology.n_ranks
+
+    @property
+    def axis(self):
+        """Axis-name argument for lax collectives: str for 1 axis, tuple else."""
+        return self.axis_names[0] if len(self.axis_names) == 1 else self.axis_names
+
+    def rank(self):
+        """Traced linearised rank of the executing device (SMI_Comm_rank)."""
+        return lax.axis_index(self.axis_names)
+
+    # ring helpers over the linearised rank order -----------------------------
+
+    def ring_perm(self, step: int = 1) -> list[tuple[int, int]]:
+        """Ring permutation (+step along linearised ranks, wrap-around)."""
+        n = self.size
+        return [(i, (i + step) % n) for i in range(n)]
+
+    def path_perm(self, path: list[int]) -> list[tuple[int, int]]:
+        """Pipeline permutation along a routed path (each hop advances)."""
+        return list(zip(path[:-1], path[1:]))
+
+
+@dataclass
+class PortAllocator:
+    """Ports must be known at compile time (paper §2.2); this allocator hands
+    out unique port ids per communicator and raises on reuse, which is the
+    software analogue of two kernels contending for one hardware FIFO."""
+
+    used: dict[str, set[int]] = field(default_factory=dict)
+
+    def claim(self, comm: Communicator, port: int) -> int:
+        ports = self.used.setdefault(comm.name, set())
+        if port in ports:
+            raise ValueError(
+                f"port {port} already claimed on communicator {comm.name!r}; "
+                "SMI ports identify distinct hardware endpoints and cannot be shared"
+            )
+        ports.add(port)
+        return port
+
+    def release_all(self, comm: Communicator) -> None:
+        self.used.pop(comm.name, None)

@@ -1,0 +1,282 @@
+"""Collective–compute overlap (the paper's core idea, applied to TPU GEMMs).
+
+SMI's streaming messages exist so that communication happens *during*
+pipelined computation rather than before/after it.  On a TPU the pipelined
+computation is a GEMM/attention on MXU tiles, so the faithful adaptation is
+the *collective matmul* family: each ring step's ppermute is interleaved with
+the per-chunk compute, so the ICI transfer of chunk i+1 overlaps the MXU work
+on chunk i.  (XLA can then software-pipeline the loop; on real TPUs the
+async collective-permute start/done pair brackets the GEMM.)
+
+These are the building blocks the model layers use in ``comm_mode="smi"``:
+
+* :func:`stream_allgather_matmul`   — column-parallel linear after sequence
+  sharding: ``AG(x) @ W`` with the AG streamed through the GEMM.
+* :func:`stream_matmul_reducescatter` — row-parallel linear:
+  ``RS(x @ W)`` with each row-block's partial GEMM computed just-in-time.
+* :func:`stream_ring_attention`     — ring attention: K/V blocks stream
+  around the ring while flash-style online-softmax accumulation runs.
+* :func:`halo_exchange_2d`          — the paper's stencil halo pattern.
+
+``matmul`` is injectable so the Pallas MXU kernel (kernels/matmul) replaces
+``jnp.dot`` on TPU; the default keeps everything traceable on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .comm import Communicator
+from .collectives import _shift, stream_reduce_scatter
+
+
+def _default_mm(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def stream_allgather_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    comm: Communicator,
+    *,
+    matmul: Callable | None = None,
+    bidir: bool = False,
+    return_gathered: bool = False,
+):
+    """``concat_p(x) @ w`` with the all-gather streamed through the GEMM.
+
+    x: (m, K) — this rank's row block (e.g. its sequence shard).
+    w: (K, N) — resident weight (a column shard of the global weight).
+    returns (P*m, N): full rows, local columns.
+
+    Per ring step: ppermute the next row block while the MXU multiplies the
+    block that just arrived — communication during computation.
+
+    ``return_gathered``: every shard passes through this device anyway, so
+    the full gathered input can be emitted for FREE (zero extra wire bytes)
+    — downstream same-input projections (KV, MLP-up, SSM gates) then run as
+    local GEMMs instead of paying their own ring (beyond-paper
+    shared-gather optimisation; see EXPERIMENTS.md §Perf).
+    """
+    mm = matmul or _default_mm
+    P = comm.size
+    r = comm.rank()
+    m = x.shape[0]
+    out = jnp.zeros((P, m, w.shape[1]), x.dtype)
+    out = lax.dynamic_update_index_in_dim(out, mm(x, w), r, 0)
+    gat = None
+    if return_gathered:
+        gat = jnp.zeros((P, m, x.shape[1]), x.dtype)
+        gat = lax.dynamic_update_index_in_dim(gat, x, r, 0)
+    if P == 1:
+        y = out.reshape(P * m, w.shape[1])
+        return (y, gat.reshape(P * m, -1)) if return_gathered else y
+    if not bidir:
+        buf = x
+        for s in range(1, P):
+            buf = _shift(buf, comm, +1)  # originated at rank r - s
+            out = lax.dynamic_update_index_in_dim(out, mm(buf, w), (r - s) % P, 0)
+            if return_gathered:
+                gat = lax.dynamic_update_index_in_dim(gat, buf, (r - s) % P, 0)
+    else:
+        up = x
+        down = x
+        n_up = P // 2
+        n_down = (P - 1) // 2
+        for s in range(1, n_up + 1):
+            up = _shift(up, comm, +1)
+            out = lax.dynamic_update_index_in_dim(out, mm(up, w), (r - s) % P, 0)
+            if return_gathered:
+                gat = lax.dynamic_update_index_in_dim(gat, up, (r - s) % P, 0)
+            if s <= n_down:
+                down = _shift(down, comm, -1)
+                out = lax.dynamic_update_index_in_dim(out, mm(down, w), (r + s) % P, 0)
+                if return_gathered:
+                    gat = lax.dynamic_update_index_in_dim(gat, down, (r + s) % P, 0)
+    y = out.reshape(P * m, w.shape[1])
+    if return_gathered:
+        return y, gat.reshape(P * m, x.shape[1])
+    return y
+
+
+def stream_matmul_reducescatter(
+    x: jax.Array,
+    w: jax.Array,
+    comm: Communicator,
+    *,
+    matmul: Callable | None = None,
+):
+    """``reduce_scatter(x @ w)`` with per-block partial GEMMs just-in-time.
+
+    x: (P*m, K_local) — full rows, contraction-sharded columns.
+    w: (K_local, N)   — the matching row shard of the global weight.
+    returns (m, N): this rank's fully-reduced row block.
+    """
+    mm = matmul or _default_mm
+    P = comm.size
+    m = x.shape[0] // P
+
+    def compute_chunk(i):
+        rows = lax.dynamic_slice_in_dim(x, i * m, m, axis=0)
+        return mm(rows, w)
+
+    return stream_reduce_scatter(None, comm, compute_chunk=compute_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Ring attention (sequence-parallel prefill)
+# ---------------------------------------------------------------------------
+
+
+def stream_ring_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    comm: Communicator,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    local_window: int | None = None,
+):
+    """Ring attention: K/V blocks stream around the ring during flash-style
+    online-softmax accumulation (SMI streaming applied to attention).
+
+    q: (B, Sq, H, D) — this rank's query block (global position r*Sq..).
+    k, v: (B, Skv, Hkv, D) — this rank's K/V block; Hkv may divide H (GQA).
+    returns (B, Sq, H, D).
+
+    ``local_window`` (tokens) implements sliding-window attention
+    (RecurrentGemma): blocks wholly outside the window are masked (the
+    ppermute still runs — uniform SPMD schedule).
+    """
+    P = comm.size
+    r = comm.rank()
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+
+    from ..kernels.common import match_vma
+
+    qf = q.astype(jnp.float32) * scale
+    # accumulators (vma matched to the inputs: they are scan carries fed by
+    # ppermute'd KV blocks)
+    m_i = match_vma(jnp.full((B, H, Sq), -1e30, jnp.float32), q)
+    l_i = match_vma(jnp.zeros((B, H, Sq), jnp.float32), q)
+    acc = match_vma(jnp.zeros((B, H, Sq, D), jnp.float32), q)
+
+    q_pos = r * Sq + jnp.arange(Sq)  # (Sq,)
+    blk = min(512, k.shape[1])       # inner flash block (VMEM-sized on TPU)
+
+    def block_update(carry, kv, owner):
+        """Online-softmax update for one arriving KV ring block, processed
+        in flash-sized chunks (lax.scan) so peak live scores stay
+        O(Sq x blk) — identical blocking to the baseline attention path."""
+        kb, vb = kv
+        Skv = kb.shape[1]
+        nkb = Skv // blk
+        kc = kb.reshape(B, nkb, blk, Hkv, D).transpose(1, 0, 2, 3, 4)
+        vc = vb.reshape(B, nkb, blk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+        def inner(c, xs):
+            m_i, l_i, acc = c
+            kcb, vcb, j = xs
+            kv_pos = owner * Skv + j * blk + jnp.arange(blk)
+            kbe = jnp.repeat(kcb.astype(jnp.float32), g, axis=2)
+            vbe = jnp.repeat(vcb.astype(jnp.float32), g, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kbe)
+            mask = jnp.ones((Sq, blk), bool)
+            if causal:
+                mask = q_pos[:, None] >= kv_pos[None, :]
+            if local_window is not None:
+                mask = jnp.logical_and(
+                    mask, q_pos[:, None] - kv_pos[None, :] < local_window
+                )
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m_i, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            corr = jnp.exp(m_i - m_new)
+            l_new = l_i * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vbe)
+            return (m_new, l_new, acc_new), None
+
+        c, _ = jax.lax.scan(inner, carry, (kc, vc, jnp.arange(nkb)))
+        return c
+
+    carry = block_update((m_i, l_i, acc), (k, v), r)
+    kv = (k, v)
+    for s_ in range(1, P):
+        kv = _shift(kv, comm, +1)
+        owner = (r - s_) % P
+        carry = block_update(carry, kv, owner)
+    m_i, l_i, acc = carry
+    l_safe = jnp.maximum(l_i, 1e-30)
+    out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3)  # (B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Halo exchange (the paper's stencil application, §5.4.2)
+# ---------------------------------------------------------------------------
+
+
+def halo_exchange_2d(
+    x: jax.Array,
+    comm: Communicator,
+    *,
+    grid: tuple[int, int],
+    halo: tuple[int, int] = (1, 1),
+):
+    """Exchange N/S/E/W halo slabs of a 2D-decomposed domain (paper Fig. 14).
+
+    x: (Nx_local, Ny_local, ...) local tile of the global domain; ranks are
+    laid out row-major on ``grid`` = (RX, RY) over the communicator.  Returns
+    the tile padded with received halos (zero at physical boundaries —
+    channels to absent neighbours "simply remain unused").
+    """
+    RX, RY = grid
+    hx, hy = halo
+    r = comm.rank()
+    rx, ry = r // RY, r % RY
+    n = comm.size
+    assert n == RX * RY
+
+    def perm(drx, dry):
+        pairs = []
+        for s in range(n):
+            sx, sy = s // RY, s % RY
+            tx, ty = sx + drx, sy + dry
+            if 0 <= tx < RX and 0 <= ty < RY:
+                pairs.append((s, tx * RY + ty))
+        return pairs
+
+    def shift(buf, drx, dry):
+        pairs = perm(drx, dry)
+        return lax.ppermute(buf, comm.axis, pairs)
+
+    # south halo travels north->south etc.  Send my boundary slabs.
+    north = shift(x[:hx], -1, 0)       # my top rows -> north neighbour's south? no:
+    # send top rows to the north neighbour? Convention: north = lower rx.
+    # x[:hx] are my north boundary rows; the north neighbour needs them as its
+    # south halo -> send to (rx-1).  Receiving side: from (rx+1): my south halo.
+    south_halo = north                  # received from rx+1: their north rows
+    south = shift(x[-hx:], +1, 0)       # my south rows -> south neighbour
+    north_halo = south                  # received from rx-1: their south rows
+    west = shift(x[:, :hy], 0, -1)
+    east_halo = west                    # from ry+1: their west cols
+    east = shift(x[:, -hy:], 0, +1)
+    west_halo = east                    # from ry-1: their east cols
+
+    Nx, Ny = x.shape[0], x.shape[1]
+    out = jnp.zeros((Nx + 2 * hx, Ny + 2 * hy) + x.shape[2:], x.dtype)
+    out = out.at[hx:-hx, hy:-hy].set(x)
+    out = out.at[:hx, hy:-hy].set(jnp.where(rx > 0, north_halo, 0))
+    out = out.at[-hx:, hy:-hy].set(jnp.where(rx < RX - 1, south_halo, 0))
+    out = out.at[hx:-hx, :hy].set(jnp.where(ry > 0, west_halo, 0))
+    out = out.at[hx:-hx, -hy:].set(jnp.where(ry < RY - 1, east_halo, 0))
+    return out

@@ -1,0 +1,295 @@
+"""Dynamic packet-switched transport (paper §4.2–§4.3).
+
+The paper's transport layer: CK_S/CK_R kernels connected to the physical
+QSFP links, forwarding fixed-size network packets according to routing
+tables that are *uploaded at runtime* — topology or rank-count changes
+never rebuild the bitstream.
+
+TPU rendering (DESIGN.md §2): the compiled XLA executable is the bitstream.
+It executes a **fixed** per-step link schedule — one ppermute per physical
+link id (±1 along each mesh dim, the ICI torus wiring) — and the routing
+table is a runtime ``(n, n)`` int32 array mapping (rank, dst) -> link id.
+Swapping tables re-routes the same compiled program, reproducing the paper's
+flexibility experiment (torus vs. bus without rebuild) exactly.
+
+Per router step (one "clock cycle"):
+  1. per link: arbitrate a packet whose table entry routes it out that link
+     — transit traffic first (drain the network), then input-FIFO traffic
+     with the paper's R-stickiness polling (§4.3: keep reading the same
+     FIFO up to R times before moving on);
+  2. all links fire their ppermute (invalid packets ride as bubbles);
+  3. arrivals are delivered (dst == me: pushed to the port's output buffer)
+     or parked in the transit FIFO for the next hop.
+
+Store-and-forward with a bounded transit FIFO; an overflow counter is
+returned so tests/benchmarks can assert lossless runs (the paper's links
+provide backpressure; we provide provable-capacity schedules instead).
+
+Packets: payload (PKT_ELEMS f32) + header (dst rank, port) — the 28 B + 4 B
+network packet of §4.2, scaled to a TPU-friendly chunk.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .comm import Communicator
+from .routing import compute_route_table, physical_link_map
+from .streaming import _pvary
+from .topology import Topology
+
+LOCAL = -1  # routing-table value for "deliver here" (never looked up)
+
+
+def make_links(dims: tuple[int, ...]):
+    """Physical link list for a torus mesh: (link_id, perm pairs).
+
+    link 2*i   = +1 along dim i; link 2*i+1 = -1 along dim i (omitted when
+    the dim has size <= 2, where -1 == +1)."""
+    topo = Topology.torus(dims)
+    n = topo.n_ranks
+    strides = []
+    s = 1
+    for d in reversed(dims):
+        strides.append(s)
+        s *= d
+    strides = list(reversed(strides))
+
+    def coords(r):
+        return [(r // strides[i]) % dims[i] for i in range(len(dims))]
+
+    def rank_of(c):
+        return sum(c[j] * strides[j] for j in range(len(dims)))
+
+    links = []
+    for i, d in enumerate(dims):
+        if d == 1:
+            continue
+        steps = (+1,) if d == 2 else (+1, -1)
+        for sidx, step in enumerate(steps):
+            pairs = []
+            for r in range(n):
+                c = coords(r)
+                c[i] = (c[i] + step) % d
+                pairs.append((r, rank_of(c)))
+            links.append((2 * i + sidx, pairs))
+    return links
+
+
+def make_router_tables(topology: Topology, dims: tuple[int, ...]) -> np.ndarray:
+    """The route generator for the dynamic router: (n, n) int32 of link ids.
+
+    Every edge of ``topology`` must be a physical neighbour pair on the
+    ``dims`` torus (the paper's constraint: logical connections are real
+    wires).  Entry [r, d] = physical link id of the first hop r -> d."""
+    rt = compute_route_table(topology)
+    phys = physical_link_map(dims)
+    # remap ids for size-2 dims where only the +1 link exists
+    links = make_links(dims)
+    live_ids = {lid for lid, _ in links}
+
+    def canon(lid):
+        return lid if lid in live_ids else lid - 1  # -1 of a size-2 dim -> +1
+
+    n = topology.n_ranks
+    tbl = np.full((n, n), LOCAL, dtype=np.int32)
+    for r in range(n):
+        for d in range(n):
+            if r == d:
+                continue
+            nh = int(rt.next_hop[r, d])
+            assert (r, nh) in phys, (
+                f"logical edge {r}->{nh} of {topology.name} is not a physical "
+                f"link on torus{dims}; embed the topology first (e.g. snake_bus)"
+            )
+            tbl[r, d] = canon(phys[(r, nh)])
+    return tbl
+
+
+def snake_bus(dims: tuple[int, int]) -> Topology:
+    """A linear bus embedded in the torus along a boustrophedon path — the
+    paper's 'treat the 8 FPGAs as a linear bus by editing the connection
+    list' experiment (§5.3.1)."""
+    X, Y = dims
+    order = []
+    for x in range(X):
+        ys = range(Y) if x % 2 == 0 else range(Y - 1, -1, -1)
+        order += [x * Y + y for y in ys]
+    edges = list(zip(order[:-1], order[1:]))
+    t = Topology.from_edges(X * Y, edges, name=f"snake_bus{dims}")
+    return t
+
+
+@dataclass(frozen=True)
+class RouterConfig:
+    dims: tuple[int, ...]
+    n_ports: int = 2          # application endpoints per rank
+    fifo_cap: int = 8         # input FIFO depth (paper: compile-time buffer)
+    transit_cap: int = 16     # CK transit queue depth
+    out_cap: int = 16         # delivery buffer per port
+    pkt_elems: int = 32       # payload elements (the 28 B packet, scaled)
+    R: int = 8                # polling stickiness (paper §4.3)
+    switch_bubble: bool = False  # model the FPGA CK's sequential polling
+    # cost: switching input FIFOs costs one dead cycle on the link (the
+    # paper's Tab. 4 effect; our combinational arbiter has no such cost
+    # physically, so it is opt-in for the reproduction benchmark)
+
+
+def run_router(
+    cfg: RouterConfig,
+    comm: Communicator,
+    route_tbl: jax.Array,      # (n, n) int32 link ids — RUNTIME data
+    inq_pay: jax.Array,        # (n_ports, fifo_cap, E) staged messages
+    inq_dst: jax.Array,        # (n_ports, fifo_cap) destination ranks
+    inq_len: jax.Array,        # (n_ports,) packets staged per FIFO
+    n_steps: int,
+):
+    """Execute ``n_steps`` router cycles.  Must run inside shard_map.
+
+    Returns (out_pay, out_cnt, overflow): per-port delivery buffers, their
+    fill counts, and the transit-overflow counter (0 == lossless run).
+    """
+    n = comm.size
+    r = comm.rank()
+    E = cfg.pkt_elems
+    NP = cfg.n_ports
+    links = make_links(cfg.dims)
+    NL = len(links)
+    my_tbl = route_tbl[jnp.minimum(r, n - 1)]  # (n,) link id per dst
+
+    def init():
+        z = lambda *sh_dt: _pvary(jnp.zeros(*sh_dt), comm)
+        return dict(
+            inq_head=z((NP,), jnp.int32),
+            inq_len=_pvary(inq_len.astype(jnp.int32), comm),
+            tr_pay=z((cfg.transit_cap, E), inq_pay.dtype),
+            tr_dst=z((cfg.transit_cap,), jnp.int32),
+            tr_port=z((cfg.transit_cap,), jnp.int32),
+            tr_head=z((), jnp.int32),
+            tr_cnt=z((), jnp.int32),
+            out_pay=z((NP, cfg.out_cap, E), inq_pay.dtype),
+            out_cnt=z((NP,), jnp.int32),
+            overflow=z((), jnp.int32),
+            last_src=z((NL,), jnp.int32),
+            stick=z((NL,), jnp.int32),
+            t_done=z((), jnp.int32),
+        )
+
+    def fifo_head(st, p):
+        """Head packet of input FIFO p: (pay, dst, port, has)."""
+        h = st["inq_head"][p]
+        pay = inq_pay[p, jnp.minimum(h, cfg.fifo_cap - 1)]
+        dst = inq_dst[p, jnp.minimum(h, cfg.fifo_cap - 1)]
+        has = h < st["inq_len"][p]
+        return pay, dst, p, has
+
+    def transit_head(st):
+        h = st["tr_head"] % cfg.transit_cap
+        return st["tr_pay"][h], st["tr_dst"][h], st["tr_port"][h], st["tr_cnt"] > 0
+
+    def step(t, st):
+        # ---- gather candidate heads: sources 0..NP-1 = FIFOs, NP = transit
+        pays, dsts, ports, has_l = [], [], [], []
+        for p in range(NP):
+            pay, dst, port, has = fifo_head(st, p)
+            pays.append(pay); dsts.append(dst); ports.append(jnp.asarray(port)); has_l.append(has)
+        tpay, tdst, tport, thas = transit_head(st)
+        pays.append(tpay); dsts.append(tdst); ports.append(tport); has_l.append(thas)
+        pays = jnp.stack(pays)               # (S, E)
+        dsts = jnp.stack(dsts)               # (S,)
+        ports = jnp.stack([jnp.asarray(p, jnp.int32) for p in ports])
+        has = jnp.stack(has_l)                  # (S,)
+        S = NP + 1
+        want_link = jnp.where(dsts == r, -2, my_tbl[jnp.clip(dsts, 0, n - 1)])  # (S,)
+
+        taken = jnp.zeros((S,), bool)
+        sel_src = []
+        for li, (lid, _) in enumerate(links):
+            avail = jnp.logical_and(has, jnp.logical_and(want_link == lid, ~taken))
+            # transit priority: if transit wants this link, take it.
+            tr_want = avail[S - 1]
+            # R-stickiness round-robin over FIFO sources
+            last = st["last_src"][li]
+            stickok = st["stick"][li] < cfg.R
+            keep = jnp.logical_and(stickok, avail[jnp.clip(last, 0, S - 1)])
+            # next available after `last` (rotate & argmax)
+            idxs = (last + 1 + jnp.arange(S)) % S
+            rot = avail[idxs]
+            off = jnp.argmax(rot)
+            rr = idxs[off]
+            chosen = jnp.where(tr_want, S - 1, jnp.where(keep, last, rr))
+            any_avail = avail.any()
+            if cfg.switch_bubble:
+                # sequential-polling model: acquiring a new FIFO burns the
+                # cycle (the link sends nothing) but the arbiter latches on
+                switching = jnp.logical_and(any_avail, chosen != last)
+                send = jnp.logical_and(any_avail, ~switching)
+            else:
+                send = any_avail
+            new_last = jnp.where(any_avail, chosen, last)
+            new_stick = jnp.where(
+                jnp.logical_and(send, chosen == last), st["stick"][li] + 1, 0
+            )
+            st["last_src"] = st["last_src"].at[li].set(new_last)
+            st["stick"] = st["stick"].at[li].set(new_stick)
+            chosen = jnp.where(send, chosen, -1)
+            taken = jnp.where(send, taken.at[jnp.clip(chosen, 0, S - 1)].set(True), taken)
+            sel_src.append(chosen)
+
+        # ---- pop selected sources
+        for li in range(NL):
+            c = sel_src[li]
+            for p in range(NP):
+                hit = c == p
+                st["inq_head"] = st["inq_head"].at[p].add(jnp.where(hit, 1, 0))
+            hit_tr = c == S - 1
+            st["tr_head"] = st["tr_head"] + jnp.where(hit_tr, 1, 0)
+            st["tr_cnt"] = st["tr_cnt"] - jnp.where(hit_tr, 1, 0)
+
+        # ---- fire all links (fixed wiring; bubbles ride as invalid)
+        arrivals = []
+        for li, (lid, pairs) in enumerate(links):
+            c = sel_src[li]
+            val = c >= 0
+            cs = jnp.clip(c, 0, S - 1)
+            pay = pays[cs]
+            dst = jnp.where(val, dsts[cs], -1)
+            prt = jnp.where(val, ports[cs], 0)
+            pay, dst, prt, val = jax.tree.map(
+                lambda v: lax.ppermute(v, comm.axis, pairs), (pay, dst, prt, val)
+            )
+            arrivals.append((pay, dst, prt, val))
+
+        # ---- absorb arrivals: deliver or park in transit
+        for pay, dst, prt, val in arrivals:
+            mine = jnp.logical_and(val, dst == r)
+            fwd = jnp.logical_and(val, dst != r)
+            # deliver to port buffer
+            for p in range(NP):
+                hit = jnp.logical_and(mine, prt == p)
+                slot = jnp.clip(st["out_cnt"][p], 0, cfg.out_cap - 1)
+                newbuf = st["out_pay"].at[p, slot].set(pay)
+                st["out_pay"] = jnp.where(hit, newbuf, st["out_pay"])
+                st["out_cnt"] = st["out_cnt"].at[p].add(jnp.where(hit, 1, 0))
+            st["t_done"] = jnp.where(mine, t.astype(jnp.int32), st["t_done"])
+            # park in transit ring buffer
+            room = st["tr_cnt"] < cfg.transit_cap
+            ok = jnp.logical_and(fwd, room)
+            tail = (st["tr_head"] + st["tr_cnt"]) % cfg.transit_cap
+            st["tr_pay"] = jnp.where(ok, st["tr_pay"].at[tail].set(pay), st["tr_pay"])
+            st["tr_dst"] = jnp.where(ok, st["tr_dst"].at[tail].set(dst), st["tr_dst"])
+            st["tr_port"] = jnp.where(ok, st["tr_port"].at[tail].set(prt), st["tr_port"])
+            st["tr_cnt"] = st["tr_cnt"] + jnp.where(ok, 1, 0)
+            st["overflow"] = st["overflow"] + jnp.where(
+                jnp.logical_and(fwd, ~room), 1, 0
+            )
+        return st
+
+    st = lax.fori_loop(0, n_steps, step, init())
+    return st["out_pay"], st["out_cnt"], st["overflow"], st["t_done"]

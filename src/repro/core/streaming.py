@@ -1,0 +1,276 @@
+"""Transient channels and the chunk-pipelined point-to-point engine (paper §3.1).
+
+The paper's key primitive is the *transient channel*: open(count, dtype, peer,
+port, comm) then Push/Pop one element per clock cycle inside the pipelined
+loop, with the transport layer forwarding packets hop-by-hop.
+
+TPU adaptation (see DESIGN.md §2): the streaming unit is a *chunk* (a
+hardware-tile-aligned slab) instead of a 28-byte packet payload, and one
+"clock cycle" is one step of a static ppermute schedule.  Two API levels:
+
+* :func:`stream_p2p` — transfer-level: a whole message streamed through the
+  routed multi-hop pipeline, ``n_chunks`` in flight; this is what the
+  collectives and the overlap engine build on.  Bandwidth is
+  hop-independent (pipelining), latency grows linearly with hops — the
+  paper's Fig. 9 / Tab. 3 behaviour by construction.
+* :class:`Channel` with :func:`push` / :func:`pop` — element-level, faithful
+  to Listing 1 of the paper: ``push`` stages an element into the pipe
+  (masked to the source rank), ``pop`` advances the global pipeline by one
+  hop-step and extracts at the destination.  Under SPMD both calls appear in
+  every rank's trace; masks select the active role, which is the JAX
+  rendering of the paper's MPMD ranks.
+
+Everything here must execute *inside* ``jax.shard_map`` spanning the
+communicator's mesh axes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .comm import Communicator
+
+
+def _mask_sel(pred, a, b):
+    """where() with scalar pred broadcast over pytrees of equal shape."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _pvary(x, comm: "Communicator"):
+    """Mark freshly-created constants as device-varying over the comm axes.
+
+    shard_map's varying-manual-axes type system requires loop carries that
+    flow through ppermute to be 'varying'; zeros created inside the region
+    start out 'invariant'.  (jax >= 0.8 VMA typing.)"""
+    names = tuple(comm.axis_names)
+
+    def cast(v):
+        vma = getattr(jax.typeof(v), "vma", frozenset())
+        missing = tuple(n for n in names if n not in vma)
+        return lax.pcast(v, missing, to="varying") if missing else v
+
+    return jax.tree.map(cast, x)
+
+
+pvary = _pvary  # public: mark user loop-carry state varying over comm axes
+
+
+# ---------------------------------------------------------------------------
+# Transfer-level streaming p2p
+# ---------------------------------------------------------------------------
+
+
+def stream_p2p(
+    x: jax.Array,
+    *,
+    src: int,
+    dst: int,
+    comm: Communicator,
+    n_chunks: int = 1,
+) -> jax.Array:
+    """Stream ``x`` (resident on ``src``) to ``dst`` along the routed path.
+
+    Every rank passes a same-shaped ``x`` (SPMD); only the source's content
+    is transmitted.  Returns a buffer that equals ``x``@src on ``dst`` and is
+    zeros elsewhere.  The message is split along axis 0 into ``n_chunks``
+    chunks that move through the multi-hop pipe one hop per step, all hops
+    advancing in parallel — one ``ppermute`` per step carrying every in-flight
+    chunk (the asynchronicity degree k of §3.3 equals the path length).
+    """
+    if src == dst:
+        return x
+    path = comm.route_table.path(src, dst)
+    hops = len(path) - 1
+    pairs = comm.path_perm(path)
+
+    S = x.shape[0]
+    assert S % n_chunks == 0, f"leading dim {S} not divisible by n_chunks={n_chunks}"
+    csz = S // n_chunks
+    r = comm.rank()
+    steps = n_chunks + hops - 1
+
+    def body(t, carry):
+        y, pipe = carry
+        # Source loads chunk t (clamped; masked to src and t < n_chunks).
+        load_idx = jnp.minimum(t, n_chunks - 1) * csz
+        inj = lax.dynamic_slice_in_dim(x, load_idx, csz, axis=0)
+        use_inj = jnp.logical_and(r == path[0], t < n_chunks)
+        pipe = _mask_sel(use_inj, inj, pipe)
+        # One pipeline shift: every hop advances.
+        pipe = lax.ppermute(pipe, comm.axis, pairs)
+        # Destination stores chunk (t - hops + 1) when it arrives.
+        c_out = t - (hops - 1)
+        store = jnp.logical_and(r == path[-1], c_out >= 0)
+        upd = lax.dynamic_update_slice_in_dim(y, pipe, jnp.maximum(c_out, 0) * csz, axis=0)
+        y = _mask_sel(store, upd, y)
+        return y, pipe
+
+    y0 = _pvary(jnp.zeros_like(x), comm)
+    pipe0 = _pvary(jnp.zeros((csz,) + x.shape[1:], x.dtype), comm)
+    y, _ = lax.fori_loop(0, steps, body, (y0, pipe0))
+    return y
+
+
+def stream_exchange(
+    x: jax.Array,
+    *,
+    pairs: list[tuple[int, int]],
+    comm: Communicator,
+) -> jax.Array:
+    """Single-hop bulk exchange over explicit (src, dst) pairs — the
+    "fixed wiring" streaming model of paper Fig. 3, for benchmarks and halo
+    exchanges between mesh neighbours (one physical link per pair)."""
+    return lax.ppermute(x, comm.axis, pairs)
+
+
+# ---------------------------------------------------------------------------
+# Element-level transient channels (paper Listing 1)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChannelSpec:
+    """Static descriptor: SMI_Open_*_channel arguments."""
+
+    count: int
+    src: int
+    dst: int
+    port: int
+    comm: Communicator
+
+    @property
+    def path(self) -> list[int]:
+        return self.comm.route_table.path(self.src, self.dst)
+
+    @property
+    def hops(self) -> int:
+        return len(self.path) - 1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Channel:
+    """Traced channel state: a 1-deep pipe register per rank on the route.
+
+    ``pushed``/``popped`` count progress; ``pipe`` holds the in-flight element
+    at this rank; ``valid`` tags pipeline bubbles.  The spec (static) rides in
+    the pytree aux data, so channels can be loop carries.
+    """
+
+    spec: ChannelSpec
+    pipe: jax.Array
+    valid: jax.Array  # bool scalar: pipe holds a live element
+    pushed: jax.Array  # i32 scalar
+    popped: jax.Array  # i32 scalar
+
+    def tree_flatten(self):
+        return (self.pipe, self.valid, self.pushed, self.popped), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, leaves):
+        return cls(spec, *leaves)
+
+
+def open_channel(
+    comm: Communicator,
+    *,
+    count: int,
+    src: int,
+    dst: int,
+    port: int = 0,
+    elem_shape=(),
+    dtype=jnp.float32,
+) -> Channel:
+    """SMI_Open_send_channel / SMI_Open_recv_channel.
+
+    Opening is a zero-cost operation (paper §3.3 eager protocol): it only
+    creates the descriptor and a zeroed pipe register; no communication
+    happens until elements flow.
+    """
+    spec = ChannelSpec(count=count, src=src, dst=dst, port=port, comm=comm)
+    return Channel(
+        spec=spec,
+        pipe=_pvary(jnp.zeros(elem_shape, dtype), comm),
+        valid=_pvary(jnp.zeros((), jnp.bool_), comm),
+        pushed=_pvary(jnp.zeros((), jnp.int32), comm),
+        popped=_pvary(jnp.zeros((), jnp.int32), comm),
+    )
+
+
+def push(chan: Channel, elem: jax.Array) -> Channel:
+    """SMI_Push: stage ``elem`` into the pipe at the source rank.
+
+    Non-blocking in trace terms; the element starts moving on the next
+    :func:`pop` (the schedule's pipeline advance).  Pipelines to one advance
+    per loop iteration — the ii=1 requirement of §3.1.1.
+    """
+    r = chan.spec.comm.rank()
+    at_src = r == chan.spec.src
+    new_pipe = _mask_sel(at_src, jnp.asarray(elem, chan.pipe.dtype), chan.pipe)
+    new_valid = jnp.where(at_src, True, chan.valid)
+    return Channel(
+        chan.spec,
+        new_pipe,
+        new_valid,
+        chan.pushed + jnp.where(at_src, 1, 0).astype(jnp.int32),
+        chan.popped,
+    )
+
+
+def pop(chan: Channel):
+    """SMI_Pop: advance the channel pipeline one hop-step and extract.
+
+    Returns ``(chan', value, valid)``: after ``hops`` advances the element
+    pushed first arrives, so a consumer loop runs ``count + hops - 1``
+    iterations and gates on ``valid`` — exactly a hardware pipeline with
+    latency = network distance (paper Tab. 3).
+    """
+    spec = chan.spec
+    r = spec.comm.rank()
+    pairs = spec.comm.path_perm(spec.path)
+    moved = lax.ppermute(chan.pipe, spec.comm.axis, pairs)
+    moved_valid = lax.ppermute(chan.valid, spec.comm.axis, pairs)
+    at_dst = r == spec.dst
+    value = moved
+    valid = jnp.logical_and(at_dst, moved_valid)
+    new = Channel(
+        spec,
+        moved,
+        moved_valid,
+        chan.pushed,
+        chan.popped + jnp.where(valid, 1, 0).astype(jnp.int32),
+    )
+    return new, value, valid
+
+
+def channel_transfer(chan: Channel, x: jax.Array, n_chunks: int = 1) -> jax.Array:
+    """Whole-message convenience: stream ``x`` over an open channel (chunked),
+    equivalent to count/chunk pushes + pops.  Dispatches to the pipelined
+    transfer engine."""
+    return stream_p2p(
+        x, src=chan.spec.src, dst=chan.spec.dst, comm=chan.spec.comm, n_chunks=n_chunks
+    )
+
+
+# ---------------------------------------------------------------------------
+# shard_map harness helpers (used by tests/examples/benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def run_spmd(fn, mesh, in_specs, out_specs, *args):
+    """jit(shard_map(fn)) one-liner used across tests and benchmarks."""
+    return jax.jit(
+        jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    )(*args)
+
+
+def make_test_mesh(shape, names):
+    """Host-device mesh with Auto axis types (tests / benchmarks)."""
+    from jax.sharding import AxisType
+
+    return jax.make_mesh(tuple(shape), tuple(names), axis_types=(AxisType.Auto,) * len(shape))

@@ -1,0 +1,4 @@
+from .inputs import make_inputs, input_specs
+from .pipeline import SyntheticTokenPipeline
+
+__all__ = ["make_inputs", "input_specs", "SyntheticTokenPipeline"]

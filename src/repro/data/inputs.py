@@ -1,0 +1,75 @@
+"""Model inputs per (arch, shape): real arrays (tests/examples) and
+ShapeDtypeStruct stand-ins (dry-run; no allocation).
+
+Modality frontends are STUBS per the assignment: the VLM's InternViT and
+MusicGen's EnCodec are not modelled; ``input_specs`` hands the backbone the
+precomputed patch/frame embeddings (vlm) or codebook token streams (audio).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def _tok_shape(cfg: ModelConfig, B: int, S: int):
+    if cfg.n_codebooks > 1:
+        return (B, S, cfg.n_codebooks)
+    return (B, S)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, batch_override=None):
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    emb_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.kind == "train":
+        spec = {
+            "tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, B, S), i32),
+            "labels": jax.ShapeDtypeStruct(_tok_shape(cfg, B, S), i32),
+        }
+        if cfg.frontend == "vit_stub":
+            spec["pixel_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), emb_dt
+            )
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, B, S), i32)}
+        if cfg.frontend == "vit_stub":
+            spec["pixel_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), emb_dt
+            )
+        return spec
+    if shape.kind == "decode":
+        tok = (B, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B,)
+        return {
+            "token": jax.ShapeDtypeStruct(tok, i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape.kind)
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig, seed=0, *, batch_override=None):
+    """Concrete deterministic arrays matching input_specs."""
+    rng = np.random.RandomState(seed)
+    out = {}
+    for k, sd in input_specs(cfg, shape, batch_override=batch_override).items():
+        if sd.dtype == jnp.int32:
+            if k == "pos":
+                out[k] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.randint(0, cfg.vocab_size, sd.shape), jnp.int32
+                )
+        else:
+            out[k] = jnp.asarray(rng.randn(*sd.shape) * 0.02, sd.dtype)
+    if "labels" in out and cfg.frontend == "vit_stub":
+        # patch positions carry no LM loss
+        lab = np.array(out["labels"], copy=True)
+        lab[:, : cfg.n_patches] = -100
+        out["labels"] = jnp.asarray(lab)
+    return out

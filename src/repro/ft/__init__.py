@@ -1,0 +1,4 @@
+from .watchdog import StepWatchdog, run_with_restarts
+from .elastic import best_mesh_shape, elastic_restart_plan
+
+__all__ = ["StepWatchdog", "run_with_restarts", "best_mesh_shape", "elastic_restart_plan"]

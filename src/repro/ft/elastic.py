@@ -1,0 +1,42 @@
+"""Elastic scaling: re-mesh to the surviving device set.
+
+Paper §2.2: "ranks involved in communication and the total number of ranks
+can be dynamically altered without recompiling the program, by simply
+updating the routing configuration at each rank."  On the SMI dynamic-router
+path that holds verbatim (core/router.py: same executable, new tables).  For
+the XLA-compiled model step, a mesh resize necessarily recompiles; what this
+module preserves is the *state*: the checkpoint re-shards onto the new mesh
+(host numpy -> device_put with new NamedShardings) and the route generator
+re-emits tables for the surviving topology.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..core import Topology, compute_route_table
+
+
+def best_mesh_shape(n_devices: int, *, prefer_model: int = 4) -> tuple[int, int]:
+    """Largest usable (data, model) grid for the surviving device count."""
+    model = min(prefer_model, n_devices)
+    while n_devices % model:
+        model -= 1
+    return (n_devices // model, model)
+
+
+def elastic_restart_plan(old_n: int, new_n: int, *, prefer_model: int = 4):
+    """Returns the new mesh shape and fresh routing tables for the new world
+    (the paper's route regeneration step)."""
+    shape = best_mesh_shape(new_n, prefer_model=prefer_model)
+    topo = Topology.torus(shape)
+    rt = compute_route_table(topo)
+    return {"mesh_shape": shape, "topology": topo, "route_table": rt}
+
+
+def reshard_state(host_state, shardings):
+    """device_put a host checkpoint onto (possibly different) shardings."""
+    return jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(a), s), host_state, shardings
+    )

@@ -1,0 +1,62 @@
+"""Fault tolerance: straggler watchdog + checkpoint/restart driver."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StepWatchdog:
+    """EMA step-time monitor: flags stragglers (a step slower than
+    ``threshold`` × the running mean) and stalls (no heartbeat).  At pod
+    scale the flagged step triggers the restart path; here it feeds tests
+    and the trainer's log."""
+
+    threshold: float = 3.0
+    alpha: float = 0.1
+    ema: float | None = None
+    events: list = field(default_factory=list)
+    _last: float | None = None
+
+    def start(self):
+        self._last = time.monotonic()
+
+    def lap(self, step: int) -> bool:
+        now = time.monotonic()
+        dt = now - (self._last if self._last is not None else now)
+        self._last = now
+        slow = False
+        if self.ema is not None and dt > self.threshold * self.ema:
+            slow = True
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+        self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
+        return slow
+
+
+def run_with_restarts(
+    make_loop,
+    checkpointer,
+    state_like,
+    *,
+    max_restarts: int = 2,
+):
+    """Run ``make_loop(start_state, start_step) -> final_state`` with
+    checkpoint/restart on failure.
+
+    ``make_loop`` raising is treated as a node failure: the driver reloads
+    the latest checkpoint and resumes.  Returns (final_state, n_restarts).
+    """
+    restarts = 0
+    state = state_like
+    step = 0
+    while True:
+        try:
+            return make_loop(state, step), restarts
+        except Exception:  # noqa: BLE001 — any failure triggers restart
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            restored, manifest = checkpointer.restore(state_like)
+            state = restored
+            step = manifest["step"]

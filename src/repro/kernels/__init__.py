@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the compute hot-spots of the SMI framework.
+
+Each subpackage: kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper with padding/dispatch), ref.py (pure-jnp
+oracle).  Validated with interpret=True on CPU; real Mosaic lowering on TPU.
+
+* matmul           — MXU-tiled GEMM; the per-chunk compute of the SMI
+                     collective-matmul overlap engine.
+* flash_attention  — online-softmax attention (causal/local, GQA).
+* stencil          — 4-point stencil sweep (the paper's application).
+* ssd              — Mamba2 state-space chunked scan.
+"""
+
+from .matmul import matmul, matmul_ref
+from .flash_attention import flash_attention, attention_ref, attention_chunked_ref
+from .stencil import stencil_step, stencil_run, stencil_ref
+from .ssd import ssd_scan, ssd_decode_step, ssd_ref
+
+__all__ = [
+    "matmul", "matmul_ref",
+    "flash_attention", "attention_ref", "attention_chunked_ref",
+    "stencil_step", "stencil_run", "stencil_ref",
+    "ssd_scan", "ssd_decode_step", "ssd_ref",
+]

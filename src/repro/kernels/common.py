@@ -1,0 +1,45 @@
+"""Shared kernel utilities: padding, backend dispatch.
+
+Kernels TARGET TPU (MXU/VMEM tiling via BlockSpec); on this CPU container
+they are validated with ``interpret=True`` against the pure-jnp ``ref.py``
+oracles.  ``use_pallas(None)`` auto-selects: real kernels on TPU backends,
+jnp reference elsewhere (models stay fast on CPU; tests force interpret)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_use_pallas(use_pallas: bool | None) -> bool:
+    return on_tpu() if use_pallas is None else use_pallas
+
+
+def pad_to(x: jax.Array, multiple: int, axis: int):
+    """Zero-pad ``axis`` up to a multiple; returns (padded, original_size)."""
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def match_vma(x, ref):
+    """Promote ``x``'s varying-manual-axes to match ``ref`` (no-op outside
+    shard_map).  Needed for scan carries created inside shard_map bodies."""
+    vma = getattr(jax.typeof(ref), "vma", frozenset())
+    have = getattr(jax.typeof(x), "vma", frozenset())
+    missing = tuple(a for a in vma if a not in have)
+    if missing:
+        return jax.lax.pcast(x, missing, to="varying")
+    return x

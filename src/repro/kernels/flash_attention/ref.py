@@ -1,0 +1,102 @@
+"""Pure-jnp oracles: dense masked softmax attention (small S) and a
+scan-based chunked flash attention (same math as the kernel; bounded
+memory — the non-TPU dispatch path for long sequences and the dry-run)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q,  # (B, Sq, H, D)
+    k,  # (B, Skv, Hkv, D)
+    v,  # (B, Skv, Hkv, D)
+    *,
+    scale=None,
+    causal=True,
+    window=None,
+):
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kf)
+    Skv = k.shape[1]
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)  # right-aligned (decode-safe)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = qpos >= kpos
+    if window is not None:
+        mask = jnp.logical_and(mask, qpos - kpos < window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def attention_chunked_ref(
+    q,  # (B, Sq, H, D)
+    k,  # (B, Skv, Hkv, D)
+    v,
+    *,
+    scale=None,
+    causal=True,
+    window=None,
+    block_k: int = 512,
+):
+    """Online-softmax attention, lax.scan over KV blocks.
+
+    Peak live memory is O(Sq * block_k) scores instead of O(Sq * Skv) —
+    required for the 32k prefill / 500k shapes, and the model-layer default
+    beyond 2k tokens.  Matches the Pallas kernel's math exactly.
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    pad = (-Skv) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkb = k.shape[1] // block_k
+
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + (Skv - Sq)  # right-aligned
+
+    kb = k.reshape(B, nkb, block_k, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nkb, block_k, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, blk):
+        m_i, l_i, acc = carry
+        kcb, vcb, j = blk
+        kf = jnp.repeat(kcb.astype(jnp.float32), g, axis=2)
+        vf = jnp.repeat(vcb.astype(jnp.float32), g, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+        kv_pos = j * block_k + jnp.arange(block_k)
+        mask = kv_pos[None, :] < Skv
+        if causal:
+            mask = jnp.logical_and(mask, q_pos[:, None] >= kv_pos[None, :])
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos[:, None] - kv_pos[None, :] < window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vf)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    from ..common import match_vma
+
+    carry0 = jax.tree.map(lambda t: match_vma(t, q), (m0, l0, a0))
+    (m_i, l_i, acc), _ = jax.lax.scan(step, carry0, (kb, vb, jnp.arange(nkb)))
+    out = acc / jnp.maximum(l_i, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,40 @@
+"""jit'd public wrapper for the MXU matmul kernel: padding + dispatch."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to, resolve_use_pallas
+from .kernel import matmul_pallas
+from .ref import matmul_ref
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_pallas", "interpret", "out_dtype"))
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, K) @ (K, N) -> (M, N); arbitrary sizes (zero-padded to blocks)."""
+    if not resolve_use_pallas(use_pallas) and not interpret:
+        return matmul_ref(x, w, out_dtype=out_dtype)
+    M, N = x.shape[0], w.shape[1]
+    xp, _ = pad_to(x, block_m, 0)
+    xp, _ = pad_to(xp, block_k, 1)
+    wp, _ = pad_to(w, block_k, 0)
+    wp, _ = pad_to(wp, block_n, 1)
+    out = matmul_pallas(
+        xp, wp,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:M, :N]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,4 @@
+from .ops import ssd_scan, ssd_decode_step
+from .ref import ssd_ref
+
+__all__ = ["ssd_scan", "ssd_decode_step", "ssd_ref"]

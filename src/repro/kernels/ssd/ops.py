@@ -1,0 +1,111 @@
+"""jit'd wrapper for SSD: padding + dispatch + single-step decode path."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import resolve_use_pallas
+from .kernel import ssd_pallas
+from .ref import ssd_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd_scan(
+    x: jax.Array,    # (BH, S, Dh)
+    dt: jax.Array,   # (BH, S)
+    B: jax.Array,    # (BH, S, Dst)
+    C: jax.Array,    # (BH, S, Dst)
+    A: jax.Array,    # (BH, 1)
+    *,
+    chunk: int = 128,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Full-sequence SSD scan (training / prefill)."""
+    if not resolve_use_pallas(use_pallas) and not interpret:
+        return _ssd_chunked_jnp(x, dt, B, C, A, chunk=chunk)
+    S = x.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        widths3 = ((0, 0), (0, pad), (0, 0))
+        x = jnp.pad(x, widths3)
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        B = jnp.pad(B, widths3)
+        C = jnp.pad(C, widths3)
+    out = ssd_pallas(x, dt, B, C, A, chunk=chunk, interpret=interpret)
+    return out[:, : S]
+
+
+def _ssd_chunked_jnp(x, dt, B, C, A, *, chunk=128):
+    """Chunked SSD in pure jnp (same math as the kernel; fast on CPU via
+    lax.scan over chunks).  Used as the non-TPU dispatch path so models keep
+    identical numerics to the kernel."""
+    BH, S, Dh = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    n = Sp // chunk
+    Dst = B.shape[-1]
+
+    xc = x.reshape(BH, n, chunk, Dh).astype(jnp.float32)
+    dtc = dt.reshape(BH, n, chunk, 1).astype(jnp.float32)
+    Bc = B.reshape(BH, n, chunk, Dst).astype(jnp.float32)
+    Cc = C.reshape(BH, n, chunk, Dst).astype(jnp.float32)
+    Af = A.astype(jnp.float32)  # (BH, 1)
+
+    a = dtc * Af[:, None, :, None][..., 0:1]          # (BH, n, L, 1)
+    cum = jnp.cumsum(a, axis=2)
+    xd = xc * dtc
+
+    ii = jnp.arange(chunk)[:, None]
+    jj = jnp.arange(chunk)[None, :]
+    tri = ii >= jj
+
+    G = jnp.einsum("bnld,bnmd->bnlm", Cc, Bc)
+    decay = jnp.exp(cum - jnp.swapaxes(cum, 2, 3))
+    scores = jnp.where(tri[None, None], G * decay, 0.0)
+    y1 = jnp.einsum("bnlm,bnmd->bnld", scores, xd)
+
+    last = cum[:, :, -1:]                              # (BH, n, 1, 1)
+    w = jnp.exp(last - cum)                            # (BH, n, L, 1)
+    chunk_state = jnp.einsum("bnls,bnld->bnsd", Bc * w, xd)  # (BH,n,Dst,Dh)
+    chunk_decay = jnp.exp(last[..., 0, 0])             # (BH, n)
+
+    def boundary(h, inp):
+        st, dec = inp
+        h_new = dec[:, None, None] * h + st
+        return h_new, h
+
+    from ..common import match_vma
+
+    h0 = match_vma(jnp.zeros((BH, Dst, Dh), jnp.float32), chunk_state)
+    _, h_in = jax.lax.scan(
+        boundary, h0,
+        (chunk_state.transpose(1, 0, 2, 3), chunk_decay.T),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3)                  # (BH, n, Dst, Dh)
+
+    y2 = jnp.exp(cum) * jnp.einsum("bnls,bnsd->bnld", Cc, h_in)
+    y = (y1 + y2).reshape(BH, Sp, Dh)[:, :S]
+    return y.astype(x.dtype)
+
+
+@jax.jit
+def ssd_decode_step(h, xt, dtt, Bt, Ct, A):
+    """Single-token decode: h (BH, Dst, Dh), xt (BH, Dh), dtt (BH,),
+    Bt/Ct (BH, Dst) -> (h', y (BH, Dh)).  O(1) state — the reason mamba2
+    runs the long_500k shape."""
+    hf = h.astype(jnp.float32)
+    dec = jnp.exp(dtt[:, None] * A[:, 0:1])            # (BH, 1)
+    upd = jnp.einsum("bs,bd->bsd", Bt.astype(jnp.float32),
+                     (dtt[:, None] * xt).astype(jnp.float32))
+    h_new = dec[..., None] * hf + upd
+    y = jnp.einsum("bs,bsd->bd", Ct.astype(jnp.float32), h_new)
+    return h_new.astype(h.dtype), y.astype(xt.dtype)

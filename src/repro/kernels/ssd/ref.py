@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: sequential SSD recurrence (the definition)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, B, C, A):
+    """x: (BH, S, Dh), dt: (BH, S), B/C: (BH, S, Dst), A: (BH, 1).
+
+    h_t = exp(dt_t A) h_{t-1} + B_t (dt_t x_t);  y_t = C_t · h_t.
+    """
+    BH, S, Dh = x.shape
+    Dst = B.shape[-1]
+
+    def per_head(xh, dth, Bh, Ch, Ah):
+        def step(h, inputs):
+            xt, dtt, Bt, Ct = inputs
+            h = jnp.exp(dtt * Ah[0]) * h + jnp.outer(Bt, dtt * xt)
+            return h, Ct @ h
+
+        h0 = jnp.zeros((Dst, Dh), jnp.float32)
+        _, y = jax.lax.scan(
+            step, h0,
+            (xh.astype(jnp.float32), dth.astype(jnp.float32),
+             Bh.astype(jnp.float32), Ch.astype(jnp.float32)),
+        )
+        return y
+
+    y = jax.vmap(per_head)(x, dt, B, C, A)
+    return y.astype(x.dtype)

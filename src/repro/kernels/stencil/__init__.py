@@ -1,0 +1,4 @@
+from .ops import stencil_step, stencil_run
+from .ref import stencil_ref
+
+__all__ = ["stencil_step", "stencil_run", "stencil_ref"]

@@ -1,0 +1,294 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (deliverable g).
+
+Per (arch × shape) on the single-pod mesh, derive the three roofline terms
+from compiled artifacts:
+
+    compute_t    = HLO_FLOPs / peak_FLOPs
+    memory_t     = HLO_bytes / HBM_bw
+    collective_t = collective_wire_bytes / ICI_bw          (per device)
+
+XLA's ``cost_analysis`` counts while-loop bodies ONCE, and the layer stack
+runs under ``lax.scan`` — so the honest total is assembled as
+
+    total(X) = full_step(X) + (n_periods - 1) * period_probe(X)
+
+where the *period probe* is a separately compiled (value_and_grad of the)
+single layer-period body under the identical shard_map/remat/FSDP context.
+The full-step numbers come from launch/dryrun.py's JSONL; the probe is
+compiled here.  MODEL_FLOPs uses the 6·N_active·D (train) / 2·N_active·D
+(inference) convention, N_active including embeddings (stated in
+EXPERIMENTS.md).  Fraction-of-roofline = MODEL_FLOPs-time / dominant term.
+
+    PYTHONPATH=src python -m repro.launch.roofline --results dryrun_results.jsonl
+"""
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_arch
+from ..mesh.api import build_fsdp_plan, fsdp_storage_specs, fsdp_gather, make_ctx
+from ..models.transformer import (
+    apply_block,
+    block_cache_specs,
+    block_specs,
+    decode_block,
+    init_block,
+    init_block_cache,
+    REMAT_POLICIES,
+)
+from .dryrun import collective_bytes
+from .mesh import batch_axes_of, make_production_mesh
+from .steps import globalize_structs, _sh
+
+PEAK = 197e12     # bf16 FLOP/s per v5e chip
+HBM = 819e9       # B/s
+ICI = 50e9        # B/s per link
+
+
+def _probe_period(cfg, shape, mesh, *, comm_mode="smi", remat="nothing",
+                  fsdp=True, shared_gather=False, ring_attn=False):
+    """Compile one layer-period's (train: fwd+bwd) body; return cost dict."""
+    batch_axes = batch_axes_of(mesh)
+    ctx = make_ctx(mesh, model_axis="model", batch_axes=batch_axes,
+                   comm_mode=comm_mode, opt_shared_gather=shared_gather,
+                   opt_ring_attn=ring_attn)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in batch_axes:
+        dp *= sizes[a]
+    tp = sizes["model"]
+
+    pattern = cfg.pattern
+    key = jax.random.PRNGKey(0)
+    pshapes = jax.eval_shape(
+        lambda: tuple(init_block(key, k, cfg, ctx) for k in pattern)
+    )
+    pspecs = tuple(block_specs(k, cfg, ctx) for k in pattern)
+    plan = build_fsdp_plan(pshapes, pspecs, mesh, batch_axes) if fsdp else None
+    store = fsdp_storage_specs(pspecs, plan, batch_axes) if fsdp else pspecs
+    pshapes_bf16 = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype
+        ), pshapes,
+    )
+
+    B = shape.global_batch
+    b_ok = B % dp == 0 and dp > 1
+    B_spec = (tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]) if b_ok else None
+
+    if shape.kind == "train":
+        S = shape.seq_len
+        x_struct = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        x_spec = P(B_spec, "model", None)
+
+        def period(pp, x):
+            def f(pp_, x_):
+                if plan is not None:
+                    pp_ = fsdp_gather(pp_, plan, ctx)
+                aux = jnp.zeros((), jnp.float32)
+                for j, k in enumerate(pattern):
+                    x_, a = apply_block(pp_[j], k, x_, cfg, ctx)
+                    aux = aux + a
+                return jnp.sum(x_.astype(jnp.float32)) + aux
+
+            body = f
+            if remat != "none":
+                body = jax.checkpoint(f, policy=REMAT_POLICIES[remat]())
+            g = jax.grad(body, argnums=(0, 1))(pp, x)
+            # collapse grads to one scalar (negligible extra flops) so the
+            # probe's out_specs stay trivial
+            leaves = jax.tree.leaves(g)
+            return sum(jnp.sum(jnp.abs(l.astype(jnp.float32))) for l in leaves)
+
+        sm = jax.shard_map(period, mesh=mesh, in_specs=(store, x_spec),
+                           out_specs=P(), check_vma=False)
+        lowered = jax.jit(sm).lower(pshapes_bf16, x_struct)
+    elif shape.kind == "prefill":
+        S = shape.seq_len
+        x_struct = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        x_spec = P(B_spec, "model", None)
+
+        def period(pp, x):
+            if plan is not None:
+                pp = fsdp_gather(pp, plan, ctx)
+            for j, k in enumerate(pattern):
+                x, _ = apply_block(pp[j], k, x, cfg, ctx)
+            return x
+
+        sm = jax.shard_map(period, mesh=mesh, in_specs=(store, x_spec),
+                           out_specs=x_spec, check_vma=False)
+        lowered = jax.jit(sm).lower(pshapes_bf16, x_struct)
+    else:  # decode
+        B_loc = B // dp if b_ok else B
+        cspecs = tuple(block_cache_specs(k, ctx, b_ok) for k in pattern)
+        clocal = jax.eval_shape(
+            lambda: tuple(
+                init_block_cache(k, cfg, B_loc, shape.seq_len, ctx, jnp.bfloat16)
+                for k in pattern
+            )
+        )
+        cglobal = globalize_structs(clocal, cspecs, mesh)
+        x_struct = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+        x_spec = P(B_spec, None, None)
+
+        def period(pp, cc, x):
+            if plan is not None:
+                pp = fsdp_gather(pp, plan, ctx)
+            new_cc = []
+            for j, k in enumerate(pattern):
+                x, c = decode_block(pp[j], k, x, cc[j], jnp.asarray(123), cfg, ctx)
+                new_cc.append(c)
+            return x, tuple(new_cc)
+
+        sm = jax.shard_map(period, mesh=mesh, in_specs=(store, cspecs, x_spec),
+                           out_specs=(x_spec, cspecs), check_vma=False)
+        lowered = jax.jit(sm).lower(pshapes_bf16, cglobal, x_struct)
+
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": collective_bytes(compiled.as_text())["total"],
+    }
+
+
+def useful_bytes_per_device(cfg, shape, n_chips):
+    """Minimum HBM traffic per device per step: params (+opt state for
+    train) + KV/state caches (decode) + activations in/out, bf16/f32."""
+    n = cfg.param_count()
+    if shape.kind == "train":
+        # fwd+bwd param reads (bf16) + grad write + Adam m/v read/write (f32)
+        per_dev = n / n_chips
+        return per_dev * (2 * 2 + 4 + 4 * 4)
+    if shape.kind == "prefill":
+        return (n / n_chips) * 2
+    # decode: params (bf16) + full KV/state cache read per token
+    cache = 0
+    S_eff = shape.seq_len if cfg.local_window is None else min(
+        shape.seq_len, cfg.local_window)
+    for kind in cfg.layer_pattern:
+        if kind in ("attn", "moe"):
+            cache += 2 * cfg.n_kv_heads * cfg.hd * S_eff * shape.global_batch * 2
+        elif kind == "ssm":
+            d_in = cfg.ssm_expand * cfg.d_model
+            nh = d_in // cfg.ssm_headdim
+            cache += nh * cfg.ssm_state * cfg.ssm_headdim * shape.global_batch * 4
+        elif kind == "rec":
+            cache += (cfg.lru_width or cfg.d_model) * shape.global_batch * 4
+    n_act = cfg.active_param_count()
+    return (n_act * 2 + cache) / n_chips
+
+
+def model_flops_per_device(cfg, shape, n_chips):
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2 * n_active * tokens
+    else:
+        total = 2 * n_active * shape.global_batch  # one new token per seq
+    return total / n_chips
+
+
+def analyze_cell(rec, *, comm_mode="smi", remat="nothing",
+                 shared_gather=False, ring_attn=False):
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mesh = make_production_mesh(multi_pod=False)
+    n_chips = 256
+    period = len(cfg.pattern)
+    n_periods = cfg.n_layers // period
+
+    probe = _probe_period(cfg, shape, mesh, comm_mode=comm_mode,
+                          remat=remat if shape.kind == "train" else "none",
+                          shared_gather=shared_gather, ring_attn=ring_attn)
+    full = {
+        "flops": rec["cost"]["flops"],
+        "bytes": rec["cost"]["bytes_accessed"],
+        "coll": rec["collectives"]["total"],
+    }
+    total = {
+        k: full[k] + max(n_periods - 1, 0) * probe[k] for k in full
+    }
+    terms = {
+        "compute_s": total["flops"] / PEAK,
+        "memory_s": total["bytes"] / HBM,
+        "collective_s": total["coll"] / ICI,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(cfg, shape, n_chips)
+    ub = useful_bytes_per_device(cfg, shape, n_chips)
+    useful_s = mf / PEAK
+    useful_mem_s = ub / HBM
+    # compute-roofline fraction for compute kinds; memory-roofline fraction
+    # (how close HBM traffic is to the minimum) for decode
+    frac = max(useful_s, useful_mem_s if shape.kind == "decode" else 0.0) \
+        / max(terms[dominant], 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": shape.kind,
+        "comm_mode": comm_mode, "variant": rec.get("variant", "base"),
+        "period_probe": probe, "full_step": full, "total": total,
+        "terms_s": {k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_bytes_per_dev": ub,
+        "useful_mem_s": round(useful_mem_s, 6),
+        "hlo_over_model_flops": total["flops"] / max(mf, 1e-30),
+        "roofline_fraction": round(frac, 4),
+        "temp_gb": rec["memory"]["temp_gb"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.jsonl")
+    ap.add_argument("--out", default="roofline_results.jsonl")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--comm-mode", default="smi")
+    ap.add_argument("--remat", default="nothing")
+    args = ap.parse_args(argv)
+
+    recs = {}
+    for line in open(args.results):
+        r = json.loads(line)
+        if r.get("ok") and not r.get("skipped") and r["mesh"] == "16x16":
+            recs[(r["arch"], r["shape"])] = r  # last wins
+
+    rows = []
+    for (arch, shape), rec in sorted(recs.items()):
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        try:
+            row = analyze_cell(rec, comm_mode=args.comm_mode, remat=args.remat)
+            rows.append(row)
+            t = row["terms_s"]
+            print(f"[roofline] {arch:24s} {shape:12s} "
+                  f"comp={t['compute_s']:.4f}s mem={t['memory_s']:.4f}s "
+                  f"coll={t['collective_s']:.4f}s dom={row['dominant']:12s} "
+                  f"frac={row['roofline_fraction']:.3f} "
+                  f"hlo/model={row['hlo_over_model_flops']:.2f}", flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(row) + "\n")
+        except Exception as e:  # noqa: BLE001
+            print(f"[roofline] {arch} {shape} FAILED: {type(e).__name__}: {e}",
+                  flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

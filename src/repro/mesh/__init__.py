@@ -1,0 +1,4 @@
+from .api import ParallelCtx, make_ctx
+from . import api
+
+__all__ = ["ParallelCtx", "make_ctx", "api"]

@@ -1,0 +1,336 @@
+"""Parallelism context: how model code talks to the mesh.
+
+Models are written once against these helpers; the context selects
+
+* ``comm_mode="smi"``  — the paper's streaming collectives (ring ppermute
+  schedules overlapped with per-chunk GEMMs, core/overlap.py),
+* ``comm_mode="bulk"`` — XLA bulk collectives (lax.all_gather / psum_scatter)
+  — the "host-orchestrated bulk transfer" baseline of the paper's
+  comparisons, and the fallback fast path,
+* ``comm_mode="none"`` — single-device (smoke tests).
+
+Sharding layout (TP over the ``model`` axis, Megatron-style + SP):
+activations in the residual stream are *sequence-sharded*; column-parallel
+projections consume an all-gather streamed through the GEMM; row-parallel
+projections emit a reduce-scatter streamed through the GEMM.  DP gradient
+sync runs over the (pod, data) axes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import Communicator
+from ..core.collectives import stream_allreduce
+from ..core.overlap import (
+    stream_allgather_matmul,
+    stream_matmul_reducescatter,
+    stream_ring_attention,
+)
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    """Everything model code needs to know about the mesh."""
+
+    model_axis: str | None = None          # TP/SP/EP axis name
+    batch_axes: tuple[str, ...] = ()       # DP axes ("pod", "data")
+    model_comm: Communicator | None = None
+    comm_mode: str = "none"                # smi | bulk | none
+    matmul_fn: Callable | None = None      # Pallas kernel injection
+    mesh: object | None = None
+    opt_shared_gather: bool = False        # beyond-paper: one seq ring/block
+    opt_ring_attn: bool = False            # beyond-paper: KV-streaming attn
+
+    @property
+    def tp(self) -> int:
+        return self.model_comm.size if self.model_comm is not None else 1
+
+    def rank(self):
+        return self.model_comm.rank() if self.model_comm is not None else 0
+
+
+def make_ctx(
+    mesh=None,
+    *,
+    model_axis: str | None = "model",
+    batch_axes: tuple[str, ...] = ("data",),
+    comm_mode: str = "bulk",
+    matmul_fn=None,
+    opt_shared_gather: bool = False,
+    opt_ring_attn: bool = False,
+) -> ParallelCtx:
+    if mesh is None or model_axis is None:
+        return ParallelCtx(comm_mode="none", mesh=mesh,
+                           opt_shared_gather=opt_shared_gather,
+                           opt_ring_attn=opt_ring_attn)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    comm = Communicator.create(model_axis, (sizes[model_axis],), name=f"tp_{model_axis}")
+    return ParallelCtx(
+        model_axis=model_axis,
+        batch_axes=tuple(a for a in batch_axes if a in sizes),
+        model_comm=comm,
+        comm_mode=comm_mode,
+        matmul_fn=matmul_fn,
+        mesh=mesh,
+        opt_shared_gather=opt_shared_gather,
+        opt_ring_attn=opt_ring_attn,
+    )
+
+
+def _mm(ctx: ParallelCtx):
+    return ctx.matmul_fn or (
+        lambda a, b: jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    )
+
+
+# ------------------------------------------------------------------ basics
+
+
+def psum_model(x, ctx: ParallelCtx):
+    if ctx.tp == 1:
+        return x
+    return lax.psum(x, ctx.model_axis)
+
+
+def psum_max_model(x, ctx: ParallelCtx):
+    if ctx.tp == 1:
+        return x
+    return lax.pmax(x, ctx.model_axis)
+
+
+def allreduce_model(x, ctx: ParallelCtx):
+    """Full all-reduce over the model axis (MoE combine, bulk decode)."""
+    if ctx.tp == 1:
+        return x
+    if ctx.comm_mode == "smi":
+        return stream_allreduce(x, ctx.model_comm)
+    return lax.psum(x, ctx.model_axis)
+
+
+# ----------------------------------------------------- fused linear comms
+
+
+def colparallel_matmul(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
+    """y = AG_seq(x) @ w_colshard.  x2d: (t_local, K) sequence-sharded rows;
+    w: (K, N_local).  Returns (t_local * tp, N_local): full rows, local cols."""
+    if ctx.tp == 1:
+        return _mm(ctx)(x2d, w)
+    if ctx.comm_mode == "smi":
+        return stream_allgather_matmul(x2d, w, ctx.model_comm, matmul=_mm(ctx))
+    xf = lax.all_gather(x2d, ctx.model_axis, axis=0, tiled=True)
+    return _mm(ctx)(xf, w)
+
+
+def colparallel_matmul_gathered(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
+    """Like colparallel_matmul but ALSO returns the gathered input (free on
+    the smi ring — every shard transits each device; one lax.all_gather in
+    bulk mode).  Enables the shared-gather block layout: later projections
+    of the same input become ring-free local GEMMs."""
+    if ctx.tp == 1:
+        return _mm(ctx)(x2d, w), x2d
+    if ctx.comm_mode == "smi":
+        return stream_allgather_matmul(
+            x2d, w, ctx.model_comm, matmul=_mm(ctx), return_gathered=True
+        )
+    xf = lax.all_gather(x2d, ctx.model_axis, axis=0, tiled=True)
+    return _mm(ctx)(xf, w), xf
+
+
+def rowparallel_matmul(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
+    """y = RS_seq(x @ w_rowshard).  x2d: (t_full, K_local) full rows, local
+    contraction; w: (K_local, N).  Returns (t_full / tp, N): seq-sharded."""
+    if ctx.tp == 1:
+        return _mm(ctx)(x2d, w)
+    if ctx.comm_mode == "smi":
+        return stream_matmul_reducescatter(x2d, w, ctx.model_comm, matmul=_mm(ctx))
+    y = _mm(ctx)(x2d, w)
+    return lax.psum_scatter(y, ctx.model_axis, scatter_dimension=0, tiled=True)
+
+
+def allgather_seq(x, ctx: ParallelCtx, axis: int = 0):
+    """Plain sequence all-gather (for non-GEMM consumers, e.g. conv)."""
+    if ctx.tp == 1:
+        return x
+    if ctx.comm_mode == "smi":
+        from ..core.collectives import stream_allgather
+
+        if axis != 0:
+            x = jnp.moveaxis(x, axis, 0)
+        g = stream_allgather(x, ctx.model_comm)
+        if axis != 0:
+            g = jnp.moveaxis(g, 0, axis)
+        return g
+    return lax.all_gather(x, ctx.model_axis, axis=axis, tiled=True)
+
+
+def reduce_scatter_seq(x, ctx: ParallelCtx, axis: int = 0):
+    if ctx.tp == 1:
+        return x
+    if ctx.comm_mode == "smi":
+        from ..core.collectives import stream_reduce_scatter
+
+        if axis != 0:
+            x = jnp.moveaxis(x, axis, 0)
+        y = stream_reduce_scatter(x, ctx.model_comm)
+        if axis != 0:
+            y = jnp.moveaxis(y, 0, axis)
+        return y
+    return lax.psum_scatter(x, ctx.model_axis, scatter_dimension=axis, tiled=True)
+
+
+def ring_attention(q, k, v, ctx: ParallelCtx, **kw):
+    """Sequence-parallel attention (prefill hillclimb path)."""
+    assert ctx.tp > 1 and ctx.comm_mode == "smi"
+    return stream_ring_attention(q, k, v, ctx.model_comm, **kw)
+
+
+# ----------------------------------------------------------- grad sync (DP)
+
+
+def grad_sync(grads, ctx: ParallelCtx, *, compressed: bool = False):
+    """Data-parallel gradient mean over the batch axes.
+
+    smi mode: streamed ring all-reduce per tensor (optionally int8 wire
+    compression — error feedback handled by the optimizer).
+    bulk mode: lax.psum.
+    """
+    if not ctx.batch_axes:
+        return grads
+    n = 1
+    if ctx.mesh is not None:
+        sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+        for a in ctx.batch_axes:
+            n *= sizes[a]
+    if ctx.comm_mode == "smi":
+        comm = Communicator.create(
+            ctx.batch_axes,
+            tuple(dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))[a] for a in ctx.batch_axes),
+            name="dp",
+        )
+        if compressed:
+            from ..core.collectives import make_int8_codec
+
+            q, dq = make_int8_codec()
+            return jax.tree.map(
+                lambda g: stream_allreduce(g, comm, quantize=q, dequantize=dq) / n, grads
+            )
+        return jax.tree.map(lambda g: stream_allreduce(g, comm) / n, grads)
+    return jax.tree.map(lambda g: lax.pmean(g, ctx.batch_axes), grads)
+
+
+# ------------------------------------------------------------------- FSDP
+
+
+def fsdp_dim_for(shape, model_spec, dp: int, *, skip_dim0: bool = False):
+    """Deterministic FSDP rule: first dim the model spec leaves unsharded
+    whose size divides the DP degree.  Returns -1 for "store replicated"
+    (None leaves would vanish from pytrees)."""
+    dims = tuple(model_spec) + (None,) * (len(shape) - len(tuple(model_spec)))
+    for i, (d, s) in enumerate(zip(dims, shape)):
+        if skip_dim0 and i == 0:
+            continue  # never shard a scan (layer-stack) dimension
+        if d is None and s % dp == 0 and s >= dp and dp > 1:
+            return i
+    return -1
+
+
+def build_fsdp_plan(param_shapes, param_specs, mesh, batch_axes):
+    """Pytree of FSDP dims (int; -1 = replicated) mirroring the params.
+    Leaves under a "periods" path are layer-stacked: their dim 0 is the scan
+    dimension and is never sharded."""
+    from jax.tree_util import tree_map_with_path
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in batch_axes:
+        dp *= sizes.get(a, 1)
+
+    def one(path, sh, sp):
+        stacked = any(getattr(k, "key", None) == "periods" for k in path)
+        return fsdp_dim_for(sh.shape, sp, dp, skip_dim0=stacked)
+
+    return tree_map_with_path(
+        one, param_shapes, param_specs,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )
+
+
+def fsdp_storage_specs(param_specs, fsdp_plan, batch_axes):
+    """Storage layout: model spec + batch axes inserted at the FSDP dim."""
+    from jax.sharding import PartitionSpec as P
+
+    ax = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+
+    def one(sp, dim):
+        if dim < 0:
+            return sp
+        dims = list(tuple(sp)) + [None] * (dim + 1 - len(tuple(sp)))
+        dims[dim] = ax
+        return P(*dims)
+
+    return jax.tree.map(
+        one, param_specs, fsdp_plan, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def fsdp_gather(params, fsdp_plan, ctx: ParallelCtx):
+    """All-gather FSDP-sharded leaves over the batch axes (inside shard_map).
+    AD transposes this to the reduce-scatter gradient sync — ZeRO-3 dataflow
+    for free.  smi mode uses the streamed ring."""
+    if not ctx.batch_axes:
+        return params
+
+    def one(p, dim):
+        if dim < 0:
+            return p
+        if ctx.comm_mode == "smi":
+            from ..core.collectives import stream_allgather
+
+            comm = _dp_comm(ctx)
+            moved = jnp.moveaxis(p, dim, 0)
+            g = stream_allgather(moved, comm)
+            return jnp.moveaxis(g, 0, dim)
+        return lax.all_gather(p, ctx.batch_axes, axis=dim, tiled=True)
+
+    return jax.tree.map(one, params, fsdp_plan)
+
+
+def _dp_comm(ctx: ParallelCtx) -> Communicator:
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    return Communicator.create(
+        ctx.batch_axes, tuple(sizes[a] for a in ctx.batch_axes), name="dp"
+    )
+
+
+def grad_sync_fsdp(grads, fsdp_plan, ctx: ParallelCtx, *, compressed=False):
+    """DP gradient mean: FSDP leaves arrive already reduce-scattered (the
+    gather transpose), so they only need /dp; replicated leaves psum."""
+    if not ctx.batch_axes:
+        return grads
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    dp = 1
+    for a in ctx.batch_axes:
+        dp *= sizes[a]
+    comm = _dp_comm(ctx) if ctx.comm_mode == "smi" else None
+    q = dq = None
+    if compressed:
+        from ..core.collectives import make_int8_codec
+
+        q, dq = make_int8_codec()
+
+    def one(g, dim):
+        if dim >= 0:
+            return g / dp
+        if ctx.comm_mode == "smi":
+            from ..core.collectives import stream_allreduce
+
+            return stream_allreduce(g, comm, quantize=q, dequantize=dq) / dp
+        return lax.pmean(g, ctx.batch_axes)
+
+    return jax.tree.map(one, grads, fsdp_plan)

@@ -1,0 +1,21 @@
+"""Model zoo: the assigned architectures as composable JAX modules."""
+
+from .model import (
+    init_lm,
+    lm_specs,
+    lm_loss,
+    lm_prefill,
+    lm_decode_step,
+    lm_caches,
+    lm_cache_specs,
+)
+
+__all__ = [
+    "init_lm",
+    "lm_specs",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "lm_caches",
+    "lm_cache_specs",
+]

@@ -1,0 +1,348 @@
+"""GQA attention: TP/SP train + prefill, distributed flash-decode.
+
+TP layout at tp-way model parallelism (all derived from the assignment's
+head counts, which are never divisible by 16 in the KV dimension):
+
+* wq, wo — head-sharded; the head count is padded up to a multiple of tp
+  and padded heads are hard-masked (zero output, zero gradient).
+* wk, wv — **replicated** (every arch here has n_kv <= 24 < 2*tp; this is
+  the standard GQA-under-TP arrangement: KV is cheap, queries are not).
+* prefill/train: sequence-parallel residual stream; column-parallel QKV via
+  streamed allgather-matmul, row-parallel output via streamed
+  matmul-reduce-scatter (the SMI overlap engine).
+* decode: KV cache sharded over the model axis on the *sequence* dim
+  (uniform regardless of kv head count); queries all-gathered (tiny) and
+  flash-decoding LSE-combine psum'd over the model axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import flash_attention
+from ..mesh.api import (
+    ParallelCtx,
+    allgather_seq,
+    colparallel_matmul,
+    colparallel_matmul_gathered,
+    psum_model,
+    rowparallel_matmul,
+)
+from .common import rms_norm, rope, trunc_normal
+
+
+def _pad_heads(H: int, tp: int) -> int:
+    return ((H + tp - 1) // tp) * tp
+
+
+def init_attention(key, cfg, ctx: ParallelCtx):
+    """GLOBAL-shape attention params (sharded onto devices by the specs;
+    head count padded to the TP degree, padded heads hard-masked)."""
+    D, hd = cfg.d_model, cfg.hd
+    tp = ctx.tp
+    Hp = _pad_heads(cfg.n_heads, tp)
+    ks = jax.random.split(key, 6)
+    s_in = D ** -0.5
+    p = {
+        "wq": trunc_normal(ks[0], (D, Hp * hd), s_in),
+        "wk": trunc_normal(ks[1], (D, cfg.n_kv_heads * hd), s_in),
+        "wv": trunc_normal(ks[2], (D, cfg.n_kv_heads * hd), s_in),
+        "wo": trunc_normal(ks[3], (Hp * hd, D), (Hp * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hp * hd,))
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,))
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+def attention_specs(cfg, ctx: ParallelCtx):
+    from jax.sharding import PartitionSpec as P
+
+    m = ctx.model_axis
+    sp = {
+        "wq": P(None, m),
+        "wk": P(None, None),
+        "wv": P(None, None),
+        "wo": P(m, None),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = P(m)
+        sp["bk"] = P(None)
+        sp["bv"] = P(None)
+    if cfg.qk_norm:
+        sp["q_norm"] = P(None)
+        sp["k_norm"] = P(None)
+    return sp
+
+
+def _head_mask_and_kv_map(cfg, ctx: ParallelCtx):
+    """(H_loc,) mask of real heads + (H_loc,) kv-head index per local head."""
+    tp = ctx.tp
+    Hp = _pad_heads(cfg.n_heads, tp)
+    H_loc = Hp // tp
+    g = max(cfg.n_heads // cfg.n_kv_heads, 1)
+    r = ctx.rank()
+    gh = r * H_loc + jnp.arange(H_loc)            # global head ids
+    mask = (gh < cfg.n_heads).astype(jnp.float32)
+    kv_idx = jnp.clip(gh // g, 0, cfg.n_kv_heads - 1)
+    return mask, kv_idx
+
+
+def apply_attention_ring(p, x, cfg, ctx: ParallelCtx):
+    """Ring-attention block (beyond-paper §Perf): the sequence stays sharded
+    and the (small, GQA) K/V blocks stream around the ring instead of the
+    (large) activations — per-layer attention wire bytes drop by
+    D / (2 * n_kv * hd) (= 4x for yi-6b, 8x for glm4-9b).
+
+    The head-sharded wq/wo are all-gathered over the model axis first (a
+    few 10s of MB — amortised against the saved activation rings); each
+    device then computes ALL heads for ITS sequence shard, so compute stays
+    balanced and no reduce-scatter is needed at the output.
+    """
+    B, S_loc, D = x.shape
+    tp = ctx.tp
+    hd = cfg.hd
+    H_loc = p["wq"].shape[1] // hd
+    Hp = H_loc * tp
+    r = ctx.rank()
+
+    # gather the head-sharded weights (small) over the model ring
+    if tp > 1:
+        wq = allgather_seq(jnp.moveaxis(p["wq"], 1, 0), ctx, axis=0)
+        wq = jnp.moveaxis(wq, 0, 1)                  # (D, Hp*hd)
+        wo = allgather_seq(p["wo"], ctx, axis=0)     # (Hp*hd, D)
+        bq = allgather_seq(p["bq"], ctx, axis=0) if cfg.qkv_bias else None
+    else:
+        wq, wo = p["wq"], p["wo"]
+        bq = p.get("bq")
+
+    x2d = x.reshape(B * S_loc, D)
+    q = x2d @ wq
+    k = x2d @ p["wk"]
+    v = x2d @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + bq
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S_loc, Hp, hd)
+    k = k.reshape(B, S_loc, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S_loc, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos = r * S_loc + jnp.arange(S_loc)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    if tp > 1:
+        from ..core.overlap import stream_ring_attention
+
+        o = stream_ring_attention(
+            q, k, v, ctx.model_comm, causal=True,
+            local_window=cfg.local_window,
+        )                                             # (B, S_loc, Hp, hd)
+    else:
+        from ..kernels import flash_attention
+
+        g = max(cfg.n_heads // cfg.n_kv_heads, 1)
+        kv_idx = jnp.clip(jnp.arange(Hp) // g, 0, cfg.n_kv_heads - 1)
+        o = flash_attention(q, jnp.take(k, kv_idx, 2), jnp.take(v, kv_idx, 2),
+                            causal=True, window=cfg.local_window)
+    head_ok = (jnp.arange(Hp) < cfg.n_heads).astype(o.dtype)
+    o = o * head_ok[None, None, :, None]
+    y = o.reshape(B * S_loc, Hp * hd) @ wo            # local rows: no RS
+    return y.reshape(B, S_loc, D)
+
+
+def apply_attention(p, x, cfg, ctx: ParallelCtx, *, use_kernel_interpret=False):
+    """Train/prefill.  x: (B, S_loc, D) sequence-sharded; returns same."""
+    if getattr(ctx, "opt_ring_attn", False):
+        return apply_attention_ring(p, x, cfg, ctx)
+    B, S_loc, D = x.shape
+    tp = ctx.tp
+    S = S_loc * tp
+    hd = cfg.hd
+    H_loc = p["wq"].shape[1] // hd
+    mask, kv_idx = _head_mask_and_kv_map(cfg, ctx)
+
+    x2d = x.reshape(B * S_loc, D)
+    # column-parallel Q (head-sharded); replicated KV
+    if ctx.opt_shared_gather:
+        # one ring: Q overlapped with the gather; KV from the free copy
+        q, xf = colparallel_matmul_gathered(x2d, p["wq"], ctx)
+    else:
+        q = colparallel_matmul(x2d, p["wq"], ctx)     # (tp*B*S_loc, H_loc*hd)
+        xf = allgather_seq(x2d, ctx) if tp > 1 else x2d
+    k = xf @ p["wk"]
+    v = xf @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+
+    def to_bshd(t, H):
+        return (
+            t.reshape(tp, B, S_loc, H, hd)
+            .transpose(1, 0, 2, 3, 4)
+            .reshape(B, S, H, hd)
+        )
+
+    q = to_bshd(q, H_loc)
+    k = to_bshd(k, cfg.n_kv_heads)
+    v = to_bshd(v, cfg.n_kv_heads)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    pos = jnp.arange(S)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    # local q heads attend their mapped kv head (gather once; GQA under TP)
+    k_sel = jnp.take(k, kv_idx, axis=2)               # (B, S, H_loc, hd)
+    v_sel = jnp.take(v, kv_idx, axis=2)
+    o = flash_attention(
+        q, k_sel, v_sel,
+        causal=True, window=cfg.local_window,
+        interpret=use_kernel_interpret,
+    )                                                  # (B, S, H_loc, hd)
+    o = o * mask[None, None, :, None].astype(o.dtype)
+    # row-parallel out projection, reduce-scatter back to sequence shards
+    o2d = (
+        o.reshape(B, tp, S_loc, H_loc, hd)
+        .transpose(1, 0, 2, 3, 4)
+        .reshape(tp * B * S_loc, H_loc * hd)
+    )
+    y = rowparallel_matmul(o2d, p["wo"], ctx)          # (B*S_loc, D)
+    return y.reshape(B, S_loc, D)
+
+
+# ------------------------------------------------------------------ decode
+
+
+def init_kv_cache(cfg, B_loc: int, capacity: int, ctx: ParallelCtx, dtype):
+    """Sequence-sharded ring cache: (B, cap/tp, Hkv, hd) + slot positions."""
+    tp = ctx.tp
+    cap_loc = capacity // tp
+    return {
+        "k": jnp.zeros((B_loc, cap_loc, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((B_loc, cap_loc, cfg.n_kv_heads, cfg.hd), dtype),
+        "slot_pos": jnp.full((cap_loc,), -1, jnp.int32),
+    }
+
+
+def kv_cache_specs(ctx: ParallelCtx, shard_batch: bool = True):
+    from jax.sharding import PartitionSpec as P
+
+    m = ctx.model_axis
+    b = None
+    if shard_batch and ctx.batch_axes:
+        b = ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+    return {"k": P(b, m, None, None), "v": P(b, m, None, None), "slot_pos": P(m)}
+
+
+def decode_attention(p, x, cache, pos, cfg, ctx: ParallelCtx):
+    """One decode step.  x: (B, 1, D) replicated over model; ``pos`` is the
+    absolute position of the new token.  Returns (y (B, 1, D), cache')."""
+    B = x.shape[0]
+    hd = cfg.hd
+    tp = ctx.tp
+    H_loc = p["wq"].shape[1] // hd
+    Hp = H_loc * tp
+    mask, kv_idx = _head_mask_and_kv_map(cfg, ctx)
+    r = ctx.rank()
+    cap_loc = cache["k"].shape[1]
+    capacity = cap_loc * tp
+
+    x2d = x.reshape(B, -1)
+    q_loc = (x2d @ p["wq"])
+    k_new = (x2d @ p["wk"])
+    v_new = (x2d @ p["wv"])
+    if cfg.qkv_bias:
+        q_loc = q_loc + p["bq"]
+        k_new = k_new + p["bk"]
+        v_new = v_new + p["bv"]
+    q_loc = q_loc.reshape(B, 1, H_loc, hd)
+    k_new = k_new.reshape(B, 1, cfg.n_kv_heads, hd)
+    v_new = v_new.reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q_loc = rms_norm(q_loc, p["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+    pos_arr = jnp.full((1,), pos)
+    q_loc = rope(q_loc, pos_arr, cfg.rope_theta)
+    k_new = rope(k_new, pos_arr, cfg.rope_theta)
+
+    # gather all query heads (tiny) so every device scans its cache slice
+    if tp > 1:
+        q = allgather_seq(q_loc.reshape(B, H_loc * hd)[None], ctx, axis=0)
+        q = q.reshape(tp, B, H_loc, hd).transpose(1, 0, 2, 3).reshape(B, Hp, hd)
+    else:
+        q = q_loc.reshape(B, Hp, hd)
+
+    # ring-buffer write: global slot = pos % capacity; shard r owns
+    # slots [r*cap_loc, (r+1)*cap_loc)
+    g_slot = pos % capacity
+    my = jnp.logical_and(g_slot >= r * cap_loc, g_slot < (r + 1) * cap_loc)
+    l_slot = jnp.clip(g_slot - r * cap_loc, 0, cap_loc - 1)
+    k_cache = jnp.where(
+        my,
+        lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), l_slot, 1),
+        cache["k"],
+    )
+    v_cache = jnp.where(
+        my,
+        lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), l_slot, 1),
+        cache["v"],
+    )
+    slot_pos = jnp.where(
+        my, cache["slot_pos"].at[l_slot].set(pos), cache["slot_pos"]
+    )
+
+    # partial attention over the local cache slice, all heads
+    kv_sel_k = jnp.take(k_cache, kv_idx_full(cfg, Hp), axis=2)  # (B, cap_loc, Hp, hd)
+    kv_sel_v = jnp.take(v_cache, kv_idx_full(cfg, Hp), axis=2)
+    s = jnp.einsum(
+        "bhd,bkhd->bhk", q.astype(jnp.float32) * hd ** -0.5,
+        kv_sel_k.astype(jnp.float32),
+    )
+    valid = slot_pos >= 0
+    valid = jnp.logical_and(valid, slot_pos <= pos)
+    if cfg.local_window is not None:
+        valid = jnp.logical_and(valid, slot_pos > pos - cfg.local_window)
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    m_loc = s.max(axis=-1)                                   # (B, Hp)
+    from ..mesh.api import psum_max_model
+
+    m_g = psum_max_model(m_loc, ctx)
+    pexp = jnp.exp(s - m_g[..., None])
+    pexp = jnp.where(valid[None, None, :], pexp, 0.0)
+    l_loc = pexp.sum(axis=-1)
+    o_loc = jnp.einsum("bhk,bkhd->bhd", pexp, kv_sel_v.astype(jnp.float32))
+    l_g = psum_model(l_loc, ctx)
+    o_g = psum_model(o_loc, ctx)
+    o = o_g / jnp.maximum(l_g, 1e-30)[..., None]             # (B, Hp, hd)
+    o = o * mask_full(cfg, Hp)[None, :, None].astype(o.dtype)
+
+    # row-parallel out proj: my head slice only, then psum
+    o_my = lax.dynamic_slice_in_dim(o, r * H_loc, H_loc, axis=1)
+    y = (o_my.reshape(B, H_loc * hd).astype(x.dtype)) @ p["wo"]
+    y = psum_model(y, ctx)
+    cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+    return y.reshape(B, 1, -1), cache
+
+
+def kv_idx_full(cfg, Hp: int):
+    g = max(cfg.n_heads // cfg.n_kv_heads, 1)
+    gh = jnp.arange(Hp)
+    return jnp.clip(gh // g, 0, cfg.n_kv_heads - 1)
+
+
+def mask_full(cfg, Hp: int):
+    return (jnp.arange(Hp) < cfg.n_heads).astype(jnp.float32)

@@ -1,0 +1,82 @@
+"""Shared model pieces: norms, RoPE, init, embeddings, vocab-parallel CE."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..mesh.api import ParallelCtx, psum_model, psum_max_model
+
+
+def trunc_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x, pos, theta: float = 10_000.0):
+    """Rotate-half RoPE.  x: (..., S, H, D); pos: (S,) absolute positions."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]      # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# -------------------------------------------------------- vocab-parallel IO
+
+
+def embed_lookup(table_local, ids, ctx: ParallelCtx):
+    """Vocab-parallel embedding: table (V_local, D), ids any int shape.
+
+    Every device holds vocab rows [r*V_local, (r+1)*V_local); out-of-shard
+    ids hit zero and the psum over the model axis assembles the embedding."""
+    V_local, D = table_local.shape
+    r = ctx.rank()
+    local = ids - r * V_local
+    ok = jnp.logical_and(local >= 0, local < V_local)
+    emb = jnp.take(table_local, jnp.clip(local, 0, V_local - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0)
+    return psum_model(emb, ctx)
+
+
+def vocab_parallel_ce(logits_local, labels, ctx: ParallelCtx):
+    """Cross entropy with vocab-sharded logits (B, S, V_local), labels (B, S).
+
+    max / sum-exp / label-pick each psum once over the model axis — the
+    standard Megatron scheme, with SMI/bulk selection at the psum level."""
+    V_local = logits_local.shape[-1]
+    r = ctx.rank()
+    lf = logits_local.astype(jnp.float32)
+    # the max shift is gradient-neutral (d(logZ+m)/dm = 0); pmax has no JVP,
+    # so stop the gradient at its *input* (symbolic-zero tangents skip it)
+    m = psum_max_model(lax.stop_gradient(lf.max(axis=-1)), ctx)  # (B, S)
+    z = psum_model(jnp.exp(lf - m[..., None]).sum(axis=-1), ctx)  # (B, S)
+    local = labels - r * V_local
+    ok = jnp.logical_and(local >= 0, local < V_local)
+    picked = jnp.take_along_axis(
+        lf, jnp.clip(local, 0, V_local - 1)[..., None], axis=-1
+    )[..., 0]
+    picked = psum_model(jnp.where(ok, picked, 0.0), ctx)
+    ce = jnp.log(z) + m - picked
+    return ce  # (B, S)
+
+
+def lm_head(x, table_local, ctx: ParallelCtx):
+    """Tied LM head: x (B, S, D) @ table (V_local, D)^T -> vocab-sharded
+    logits.  Column-parallel (no comm; the loss handles the reduction)."""
+    return jnp.einsum("bsd,vd->bsv", x, table_local).astype(jnp.float32)

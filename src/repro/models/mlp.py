@@ -1,0 +1,76 @@
+"""Feed-forward blocks: SwiGLU / GELU, column->row parallel with streamed
+collective-matmul (the paper's communication-during-computation applied to
+the MLP pair)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..mesh.api import (
+    ParallelCtx,
+    colparallel_matmul,
+    colparallel_matmul_gathered,
+    rowparallel_matmul,
+)
+from .common import silu, trunc_normal
+
+
+def init_mlp(key, cfg, ctx: ParallelCtx, d_ff: int | None = None):
+    """GLOBAL-shape MLP params; d_ff must divide the TP degree (all assigned
+    archs do — asserted so a bad config fails loudly)."""
+    D = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    assert ff % ctx.tp == 0, f"d_ff={ff} not divisible by tp={ctx.tp}"
+    ks = jax.random.split(key, 3)
+    p = {}
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = trunc_normal(ks[0], (D, ff), D ** -0.5)
+        p["w_up"] = trunc_normal(ks[1], (D, ff), D ** -0.5)
+    else:
+        p["w_up"] = trunc_normal(ks[1], (D, ff), D ** -0.5)
+    p["w_down"] = trunc_normal(ks[2], (ff, D), ff ** -0.5)
+    return p
+
+
+def mlp_specs(cfg, ctx: ParallelCtx):
+    from jax.sharding import PartitionSpec as P
+
+    m = ctx.model_axis
+    sp = {"w_up": P(None, m), "w_down": P(m, None)}
+    if cfg.mlp_type == "swiglu":
+        sp["w_gate"] = P(None, m)
+    return sp
+
+
+def apply_mlp(p, x, cfg, ctx: ParallelCtx):
+    """x: (B, S_loc, D) sequence-sharded -> same."""
+    B, S_loc, D = x.shape
+    x2d = x.reshape(B * S_loc, D)
+    if cfg.mlp_type == "swiglu":
+        if ctx.opt_shared_gather:
+            g, xf = colparallel_matmul_gathered(x2d, p["w_gate"], ctx)
+            u = xf @ p["w_up"]          # ring-free: reuse the gathered input
+        else:
+            g = colparallel_matmul(x2d, p["w_gate"], ctx)
+            u = colparallel_matmul(x2d, p["w_up"], ctx)
+        h = silu(g) * u
+    else:
+        u = colparallel_matmul(x2d, p["w_up"], ctx)
+        h = jax.nn.gelu(u)
+    y = rowparallel_matmul(h, p["w_down"], ctx)
+    return y.reshape(B, S_loc, D)
+
+
+def apply_mlp_replicated(p, x, cfg, ctx: ParallelCtx):
+    """Decode path: x (B, 1, D) replicated; partial-sum via psum."""
+    from ..mesh.api import allreduce_model
+
+    B = x.shape[0]
+    x2d = x.reshape(B, -1)
+    if cfg.mlp_type == "swiglu":
+        h = silu(x2d @ p["w_gate"]) * (x2d @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x2d @ p["w_up"])
+    y = allreduce_model(h @ p["w_down"], ctx)
+    return y.reshape(B, 1, -1)

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts with expert parallelism over the model axis.
+
+Formulation (per device): experts are sharded over the model axis
+(E_loc = E/tp per device); the MoE operates on the *replicated* token view
+(decode) or the sequence-gathered view (train/prefill, where the residual
+stream is sequence-sharded and tokens transit through the same allgather the
+attention path uses).  Each device:
+
+  1. routes every token it sees (router weights replicated — tiny),
+  2. sort-based capacity dispatch of the tokens choosing *its* experts into
+     an (E_loc, C, D) buffer (no (T, E, C) one-hot monster),
+  3. local expert GEMMs,
+  4. scatter back + weighted combine, then a single reduce over the model
+     axis (SMI streamed ring or lax.psum) merges per-expert-group partials —
+     the EP "combine" collective, reduce-scattered back into sequence shards.
+
+Capacity follows the paper's buffer-size philosophy: an optimisation
+parameter that cannot affect correctness of the *protocol* (overflowing
+tokens are dropped, the standard MoE trade-off; aux load-balance loss keeps
+the router from overflowing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..mesh.api import (
+    ParallelCtx,
+    allgather_seq,
+    reduce_scatter_seq,
+)
+from .common import silu, trunc_normal
+
+
+def _e_loc(E: int, tp: int) -> int:
+    assert E % tp == 0 or tp == 1, f"{E} experts not divisible by tp={tp}"
+    return E // tp if tp > 1 else E
+
+
+def init_moe(key, cfg, ctx: ParallelCtx):
+    """GLOBAL-shape MoE params (experts sharded over model by the specs)."""
+    D = cfg.d_model
+    E = cfg.n_experts
+    ffe = cfg.d_ff_expert
+    assert E % ctx.tp == 0 or ctx.tp == 1
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": trunc_normal(ks[0], (D, E), D ** -0.5),
+        "w_gate": trunc_normal(ks[1], (E, D, ffe), D ** -0.5),
+        "w_up": trunc_normal(ks[2], (E, D, ffe), D ** -0.5),
+        "w_down": trunc_normal(ks[3], (E, ffe, D), ffe ** -0.5),
+    }
+    if cfg.shared_expert:
+        from .mlp import init_mlp
+
+        p["shared"] = init_mlp(ks[4], cfg, ctx, d_ff=cfg.d_ff)
+    return p
+
+
+def moe_specs(cfg, ctx: ParallelCtx):
+    from jax.sharding import PartitionSpec as P
+
+    m = ctx.model_axis
+    sp = {
+        "router": P(None, None),
+        "w_gate": P(m, None, None),
+        "w_up": P(m, None, None),
+        "w_down": P(m, None, None),
+    }
+    if cfg.shared_expert:
+        from .mlp import mlp_specs
+
+        sp["shared"] = mlp_specs(cfg, ctx)
+    return sp
+
+
+def _dispatch_compute(p, xf, cfg, ctx: ParallelCtx):
+    """xf: (T, D) full token view on this device.  Returns this device's
+    expert-group partial output (T, D) and the aux loss ingredients."""
+    T, D = xf.shape
+    E = cfg.n_experts
+    k = cfg.top_k
+    tp = ctx.tp
+    E_loc = _e_loc(E, tp)
+    r = ctx.rank() if tp > 1 else 0
+
+    logits = (xf @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                # (E,)
+    ce = jnp.zeros((E,)).at[gate_idx.reshape(-1)].add(
+        jnp.ones((T * k,)) / (T * k)
+    )
+    aux = E * jnp.sum(me * ce)
+
+    # flatten assignments, keep only my expert group
+    e_flat = gate_idx.reshape(-1)                          # (T*k,)
+    w_flat = gate_vals.reshape(-1)
+    t_flat = jnp.arange(T * k) // k
+    local_e = e_flat - r * E_loc
+    mine = jnp.logical_and(local_e >= 0, local_e < E_loc)
+
+    C = int(max(8, round(cfg.capacity_factor * T * k / E)))
+    # rank within expert queue via sort by (expert, arrival)
+    sort_key = jnp.where(mine, local_e, E_loc).astype(jnp.int32)
+    order = jnp.argsort(sort_key, stable=True)
+    e_sorted = sort_key[order]
+    # position within each expert's run
+    idx = jnp.arange(T * k)
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E_loc), side="left")
+    pos = idx - starts[jnp.clip(e_sorted, 0, E_loc - 1)]
+    keep = jnp.logical_and(e_sorted < E_loc, pos < C)
+
+    slot = jnp.where(keep, e_sorted * C + pos, E_loc * C)  # overflow -> dump row
+    buf = jnp.zeros((E_loc * C + 1, D), xf.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xf[t_flat[order]], 0))
+    ein = buf[:-1].reshape(E_loc, C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", ein, p["w_gate"])
+    h = silu(h) * jnp.einsum("ecd,edf->ecf", ein, p["w_up"])
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E_loc * C, D)
+    eout = jnp.concatenate([eout, jnp.zeros((1, D), eout.dtype)], axis=0)
+
+    tok_out = eout[slot] * jnp.where(keep, w_flat[order], 0.0)[:, None]
+    y = jnp.zeros((T, D), xf.dtype).at[t_flat[order]].add(tok_out.astype(xf.dtype))
+    return y, aux
+
+
+def apply_moe(p, x, cfg, ctx: ParallelCtx):
+    """Train/prefill.  x: (B, S_loc, D) sequence-sharded -> same (+aux)."""
+    B, S_loc, D = x.shape
+    tp = ctx.tp
+    x2d = x.reshape(B * S_loc, D)
+    xf = allgather_seq(x2d, ctx) if tp > 1 else x2d        # (T, D)
+    y_part, aux = _dispatch_compute(p, xf, cfg, ctx)
+    # merge expert-group partials AND return to sequence shards in one RS
+    y = reduce_scatter_seq(y_part, ctx) if tp > 1 else y_part
+    y = y.reshape(B, S_loc, D)
+    if cfg.shared_expert:
+        from .mlp import apply_mlp
+
+        y = y + apply_mlp(p["shared"], x, cfg, ctx)
+    return y, aux
+
+
+def apply_moe_replicated(p, x, cfg, ctx: ParallelCtx):
+    """Decode: x (B, 1, D) replicated -> same (+aux)."""
+    from ..mesh.api import allreduce_model
+
+    B, _, D = x.shape
+    y_part, aux = _dispatch_compute(p, x.reshape(B, D), cfg, ctx)
+    y = allreduce_model(y_part, ctx).reshape(B, 1, D)
+    if cfg.shared_expert:
+        from .mlp import apply_mlp_replicated
+
+        y = y + apply_mlp_replicated(p["shared"], x, cfg, ctx)
+    return y, aux

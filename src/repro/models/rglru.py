@@ -1,0 +1,149 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) under TP.
+
+Block: x -> [linear -> causal conv -> RG-LRU] ⊙ gelu(linear) -> out proj.
+The RG-LRU gates are per-channel (diagonal) — the Griffin paper's
+block-diagonal gate weights are simplified to diagonal here; recorded in
+DESIGN.md §Arch-applicability.  The linear recurrence
+``h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t ⊙ x_t)`` runs as an associative
+scan over the gathered sequence; channels (lru_width) are column-sharded.
+Decode carries (conv window, h) — O(1) state, so the hybrid runs long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..mesh.api import (
+    ParallelCtx,
+    allgather_seq,
+    allreduce_model,
+    colparallel_matmul,
+    rowparallel_matmul,
+)
+from .common import silu, trunc_normal
+from .ssm import _causal_conv
+
+_C_GATE = 8.0  # Griffin's fixed gate sharpness
+
+
+def _w_loc(cfg, tp: int) -> int:
+    w = cfg.lru_width or cfg.d_model
+    assert w % tp == 0 or tp == 1
+    return w // tp if tp > 1 else w
+
+
+def init_rglru(key, cfg, ctx: ParallelCtx):
+    """GLOBAL-shape RG-LRU params (lru_width sharded by the specs)."""
+    D = cfg.d_model
+    W = cfg.lru_width or cfg.d_model
+    assert W % ctx.tp == 0 or ctx.tp == 1
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    s = D ** -0.5
+    return {
+        "w_branch": trunc_normal(ks[0], (D, W), s),
+        "w_gate": trunc_normal(ks[1], (D, W), s),
+        "conv": trunc_normal(ks[2], (K, W), K ** -0.5),
+        "lam": jnp.full((W,), 1.0),          # Λ: a = sigmoid ∘ softplus decay
+        "wa": jnp.zeros((W,)),               # recurrence-gate diag weight
+        "ba": jnp.zeros((W,)),
+        "wi": jnp.zeros((W,)),               # input-gate diag weight
+        "bi": jnp.zeros((W,)),
+        "w_out": trunc_normal(ks[3], (W, D), W ** -0.5),
+    }
+
+
+def rglru_specs(cfg, ctx: ParallelCtx):
+    from jax.sharding import PartitionSpec as P
+
+    m = ctx.model_axis
+    return {
+        "w_branch": P(None, m), "w_gate": P(None, m), "conv": P(None, m),
+        "lam": P(m), "wa": P(m), "ba": P(m), "wi": P(m), "bi": P(m),
+        "w_out": P(m, None),
+    }
+
+
+def _gates(p, u):
+    """u: (..., W_loc) conv output.  Returns (a, b) of h = a h_prev + b."""
+    r = jax.nn.sigmoid(p["wa"] * u + p["ba"])
+    i = jax.nn.sigmoid(p["wi"] * u + p["bi"])
+    log_a = -_C_GATE * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+    return a, b
+
+
+def apply_rglru(p, x, cfg, ctx: ParallelCtx):
+    """Train/prefill.  x: (B, S_loc, D) sequence-sharded -> same."""
+    B, S_loc, D = x.shape
+    tp = ctx.tp
+    S = S_loc * tp
+    W_loc = _w_loc(cfg, tp)
+
+    x2d = x.reshape(B * S_loc, D)
+    if ctx.opt_shared_gather:
+        from ..mesh.api import colparallel_matmul_gathered
+
+        br, xf = colparallel_matmul_gathered(x2d, p["w_branch"], ctx)
+        gt = xf @ p["w_gate"]           # ring-free
+    else:
+        br = colparallel_matmul(x2d, p["w_branch"], ctx)
+        gt = colparallel_matmul(x2d, p["w_gate"], ctx)
+
+    def to_bsc(t):
+        return t.reshape(tp, B, S_loc, W_loc).transpose(1, 0, 2, 3).reshape(B, S, W_loc)
+
+    br = to_bsc(br)
+    gt = to_bsc(gt)
+    u = _causal_conv(br, p["conv"])
+    a, b = _gates(p, u.astype(jnp.float32))
+
+    # associative linear recurrence over the sequence
+    def combine(l, r):
+        al, bl = l
+        ar, br_ = r
+        return al * ar, ar * bl + br_
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype)) * jax.nn.gelu(gt)
+    y2d = (
+        y.reshape(B, tp, S_loc, W_loc).transpose(1, 0, 2, 3).reshape(tp * B * S_loc, W_loc)
+    )
+    out = rowparallel_matmul(y2d, p["w_out"], ctx)
+    return out.reshape(B, S_loc, D)
+
+
+def init_rglru_cache(cfg, B: int, ctx: ParallelCtx, dtype):
+    W_loc = _w_loc(cfg, ctx.tp)
+    K = cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((B, K - 1, W_loc), dtype),
+        "h": jnp.zeros((B, W_loc), jnp.float32),
+    }
+
+
+def rglru_cache_specs(ctx: ParallelCtx, shard_batch: bool = True):
+    from jax.sharding import PartitionSpec as P
+
+    m = ctx.model_axis
+    b = None
+    if shard_batch and ctx.batch_axes:
+        b = ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+    return {"conv": P(b, None, m), "h": P(b, m)}
+
+
+def decode_rglru(p, x, cache, cfg, ctx: ParallelCtx):
+    """x: (B, 1, D) replicated -> (y, cache')."""
+    B = x.shape[0]
+    x2d = x.reshape(B, -1)
+    br = x2d @ p["w_branch"]
+    gt = x2d @ p["w_gate"]
+    cx = jnp.concatenate([cache["conv"], br[:, None]], axis=1)
+    u = jnp.einsum("bkc,kc->bc", cx, p["conv"])
+    a, b = _gates(p, u.astype(jnp.float32))
+    h = a * cache["h"] + b
+    y = h.astype(x.dtype) * jax.nn.gelu(gt)
+    out = allreduce_model(y @ p["w_out"], ctx)
+    return out.reshape(B, 1, -1), {"conv": cx[:, 1:], "h": h}

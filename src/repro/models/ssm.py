@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) mixer block under TP, backed by the ssd Pallas kernel.
+
+TP layout: the inner width (expand*D) and its heads are column-sharded;
+B/C projections (shared across heads, ngroups=1 simplification — recorded in
+DESIGN.md) are replicated.  Train/prefill runs on the sequence-gathered view
+(the same streamed allgather the attention path uses) because the causal
+conv and the scan need contiguous sequences; output returns to sequence
+shards through the streamed matmul-reduce-scatter.  Decode carries a
+(conv window, SSD state) cache — O(1) in sequence length, which is why this
+arch runs the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import ssd_scan, ssd_decode_step
+from ..mesh.api import (
+    ParallelCtx,
+    allgather_seq,
+    allreduce_model,
+    colparallel_matmul,
+    rowparallel_matmul,
+)
+from .common import rms_norm, silu, trunc_normal
+
+
+def _dims(cfg, tp: int):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    assert nh % tp == 0 or tp == 1, f"{nh} ssm heads vs tp={tp}"
+    nh_loc = nh // tp if tp > 1 else nh
+    return d_in, nh, nh_loc, nh_loc * cfg.ssm_headdim
+
+
+def init_ssm(key, cfg, ctx: ParallelCtx):
+    """GLOBAL-shape SSM params (inner width/heads sharded by the specs)."""
+    D = cfg.d_model
+    tp = ctx.tp
+    d_in, nh, nh_loc, d_in_loc = _dims(cfg, tp)
+    Dst = cfg.ssm_state
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    s = D ** -0.5
+    return {
+        "w_z": trunc_normal(ks[0], (D, d_in), s),
+        "w_x": trunc_normal(ks[1], (D, d_in), s),
+        "w_bc": trunc_normal(ks[2], (D, 2 * Dst), s),
+        "w_dt": trunc_normal(ks[3], (D, nh), s),
+        "dt_bias": jnp.zeros((nh,)),
+        "A_log": jnp.zeros((nh,)),                # A = -exp(A_log) -> -1
+        "D_skip": jnp.ones((nh,)),
+        "conv_x": trunc_normal(ks[4], (K, d_in), K ** -0.5),
+        "conv_bc": trunc_normal(ks[5], (K, 2 * Dst), K ** -0.5),
+        "gn": jnp.ones((cfg.ssm_headdim,)),       # grouped (per-head) norm
+        "w_out": trunc_normal(ks[6], (d_in, D), d_in ** -0.5),
+    }
+
+
+def ssm_specs(cfg, ctx: ParallelCtx):
+    from jax.sharding import PartitionSpec as P
+
+    m = ctx.model_axis
+    return {
+        "w_z": P(None, m), "w_x": P(None, m), "w_bc": P(None, None),
+        "w_dt": P(None, m), "dt_bias": P(m), "A_log": P(m), "D_skip": P(m),
+        "conv_x": P(None, m), "conv_bc": P(None, None), "gn": P(None),
+        "w_out": P(m, None),
+    }
+
+
+def _loc_cols(w, ctx):
+    """Inside shard_map the column-sharded weight is already local."""
+    return w
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv.  x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out
+
+
+def apply_ssm(p, x, cfg, ctx: ParallelCtx, *, use_kernel_interpret=False):
+    """Train/prefill.  x: (B, S_loc, D) sequence-sharded -> same."""
+    B, S_loc, D = x.shape
+    tp = ctx.tp
+    S = S_loc * tp
+    d_in, nh, nh_loc, d_in_loc = _dims(cfg, tp)
+    hd = cfg.ssm_headdim
+    Dst = cfg.ssm_state
+
+    x2d = x.reshape(B * S_loc, D)
+    if ctx.opt_shared_gather:
+        # one ring for the whole mixer: z overlapped, x/B/C/dt from the copy
+        from ..mesh.api import colparallel_matmul_gathered
+
+        z, xf = colparallel_matmul_gathered(x2d, p["w_z"], ctx)
+        xin = xf @ _loc_cols(p["w_x"], ctx)
+    else:
+        z = colparallel_matmul(x2d, p["w_z"], ctx)      # (tp*B*S_loc, d_in_loc)
+        xin = colparallel_matmul(x2d, p["w_x"], ctx)
+        xf = allgather_seq(x2d, ctx) if tp > 1 else x2d
+    bc = xf @ p["w_bc"]                                  # (T, 2*Dst)
+    dt_raw = xf @ p["w_dt"]                              # (T, nh_loc)
+
+    def to_bsc(t, C):
+        return (
+            t.reshape(tp, B, S_loc, C).transpose(1, 0, 2, 3).reshape(B, S, C)
+        )
+
+    z = to_bsc(z, d_in_loc)
+    xin = to_bsc(xin, d_in_loc)
+    bc = to_bsc(bc, 2 * Dst)
+    dt_raw = to_bsc(dt_raw, nh_loc)
+
+    xin = silu(_causal_conv(xin, p["conv_x"]))
+    bc = silu(_causal_conv(bc, p["conv_bc"]))
+    Bm, Cm = bc[..., :Dst], bc[..., Dst:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])          # (B, S, nh_loc)
+
+    # per-head SSD scan via the kernel
+    xh = xin.reshape(B, S, nh_loc, hd).transpose(0, 2, 1, 3).reshape(B * nh_loc, S, hd)
+    dth = dt.transpose(0, 2, 1).reshape(B * nh_loc, S)
+    Bh = jnp.broadcast_to(Bm[:, None], (B, nh_loc, S, Dst)).reshape(B * nh_loc, S, Dst)
+    Ch = jnp.broadcast_to(Cm[:, None], (B, nh_loc, S, Dst)).reshape(B * nh_loc, S, Dst)
+    A = -jnp.exp(p["A_log"])                             # (nh_loc,)
+    Ah = jnp.broadcast_to(A[None, :], (B, nh_loc)).reshape(B * nh_loc, 1)
+    y = ssd_scan(xh, dth, Bh, Ch, Ah, interpret=use_kernel_interpret)
+    # per-head skip connection
+    d_sk = jnp.broadcast_to(p["D_skip"][None, :], (B, nh_loc)).reshape(B * nh_loc, 1, 1)
+    y = y + d_sk * xh
+    y = y.reshape(B, nh_loc, S, hd)
+    y = rms_norm(y, p["gn"], cfg.norm_eps)               # grouped norm per head
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d_in_loc)
+    y = y * silu(z)
+    # row-parallel out proj, back to sequence shards
+    y2d = (
+        y.reshape(B, tp, S_loc, d_in_loc)
+        .transpose(1, 0, 2, 3)
+        .reshape(tp * B * S_loc, d_in_loc)
+    )
+    out = rowparallel_matmul(y2d, p["w_out"], ctx)
+    return out.reshape(B, S_loc, D)
+
+
+# ------------------------------------------------------------------ decode
+
+
+def init_ssm_cache(cfg, B: int, ctx: ParallelCtx, dtype):
+    tp = ctx.tp
+    d_in, nh, nh_loc, d_in_loc = _dims(cfg, tp)
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((B, K - 1, d_in_loc), dtype),
+        "conv_bc": jnp.zeros((B, K - 1, 2 * cfg.ssm_state), dtype),
+        "state": jnp.zeros((B, nh_loc, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def ssm_cache_specs(ctx: ParallelCtx, shard_batch: bool = True):
+    from jax.sharding import PartitionSpec as P
+
+    m = ctx.model_axis
+    b = _bax(ctx) if shard_batch else None
+    return {"conv_x": P(b, None, m), "conv_bc": P(b, None, None),
+            "state": P(b, m, None, None)}
+
+
+def _bax(ctx: ParallelCtx):
+    if not ctx.batch_axes:
+        return None
+    return ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+
+
+def decode_ssm(p, x, cache, cfg, ctx: ParallelCtx):
+    """x: (B, 1, D) replicated -> (y, cache')."""
+    B = x.shape[0]
+    tp = ctx.tp
+    d_in, nh, nh_loc, d_in_loc = _dims(cfg, tp)
+    hd = cfg.ssm_headdim
+    Dst = cfg.ssm_state
+    K = cfg.ssm_conv
+
+    x2d = x.reshape(B, -1)
+    z = x2d @ p["w_z"]
+    xin = x2d @ p["w_x"]
+    bc = x2d @ p["w_bc"]
+    dt_raw = x2d @ p["w_dt"]
+
+    cx = jnp.concatenate([cache["conv_x"], xin[:, None]], axis=1)  # (B, K, C)
+    cb = jnp.concatenate([cache["conv_bc"], bc[:, None]], axis=1)
+    xin_c = silu(jnp.einsum("bkc,kc->bc", cx, p["conv_x"]))
+    bc_c = silu(jnp.einsum("bkc,kc->bc", cb, p["conv_bc"]))
+    Bm, Cm = bc_c[..., :Dst], bc_c[..., Dst:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                    # (B, nh_loc)
+
+    xh = xin_c.reshape(B * nh_loc, hd)
+    dth = dt.reshape(B * nh_loc)
+    Bh = jnp.broadcast_to(Bm[:, None], (B, nh_loc, Dst)).reshape(B * nh_loc, Dst)
+    Ch = jnp.broadcast_to(Cm[:, None], (B, nh_loc, Dst)).reshape(B * nh_loc, Dst)
+    A = -jnp.exp(p["A_log"])
+    Ah = jnp.broadcast_to(A[None, :], (B, nh_loc)).reshape(B * nh_loc, 1)
+    st_flat = cache["state"].reshape(B * nh_loc, Dst, hd)
+    state, y = ssd_decode_step(st_flat, xh, dth, Bh, Ch, Ah)
+    state = state.reshape(B, nh_loc, Dst, hd)
+    y = y + jnp.broadcast_to(p["D_skip"][None, :], (B, nh_loc)).reshape(
+        B * nh_loc, 1
+    ) * xh
+    y = rms_norm(y.reshape(B, nh_loc, 1, hd), p["gn"], cfg.norm_eps)
+    y = y.reshape(B, d_in_loc) * silu(z)
+    out = allreduce_model(y @ p["w_out"], ctx)
+    cache = {"conv_x": cx[:, 1:], "conv_bc": cb[:, 1:], "state": state}
+    return out.reshape(B, 1, -1), cache

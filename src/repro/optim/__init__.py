@@ -1,0 +1,8 @@
+from .adamw import adamw_init, adamw_update, opt_specs
+from .schedule import cosine_warmup
+from .grad import clip_by_global_norm, ErrorFeedback
+
+__all__ = [
+    "adamw_init", "adamw_update", "opt_specs",
+    "cosine_warmup", "clip_by_global_norm", "ErrorFeedback",
+]

@@ -1,0 +1,84 @@
+"""AdamW with ZeRO-1-style state sharding.
+
+Parameters live model-sharded / data-replicated (the forward layout);
+optimizer moments additionally shard over the data axes wherever a tensor
+dimension divides (``opt_specs``).  The update is elementwise, so under jit
+XLA turns the layout difference into: slice grads (free — they're replicated
+post-sync), update the local moment shard, all-gather fresh params — exactly
+the ZeRO-1 dataflow, derived from shardings rather than hand-written."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params,
+    grads,
+    opt,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    step = opt["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def opt_specs(param_specs, mesh, params_shape, data_axes=("data",)):
+    """ZeRO-1: shard moments over the data axes on the first dimension whose
+    size divides and which the param spec leaves unsharded."""
+    from jax.sharding import PartitionSpec as P
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in data_axes:
+        dp *= sizes.get(a, 1)
+
+    def spec_for(ps, shape_leaf):
+        dims = tuple(ps) + (None,) * (len(shape_leaf.shape) - len(tuple(ps)))
+        for i, (d, s) in enumerate(zip(dims, shape_leaf.shape)):
+            if d is None and s % dp == 0 and s > 0 and dp > 1:
+                new = list(dims)
+                new[i] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+                return P(*new)
+        return P(*dims)
+
+    moment_specs = jax.tree.map(
+        spec_for, param_specs, params_shape,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"m": moment_specs, "v": moment_specs, "step": P()}

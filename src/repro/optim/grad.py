@@ -1,0 +1,38 @@
+"""Gradient utilities: global-norm clipping; error feedback for the int8
+compressed gradient rings (core/collectives.make_int8_codec)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), grads),
+    )
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+class ErrorFeedback:
+    """Residual accumulator for lossy (int8) gradient sync.
+
+    usage: g_corrected = ef.add(grads); <compressed all-reduce of
+    g_corrected -> g_synced>; ef.update(g_corrected, g_synced).
+    State is a pytree like grads; functional (returns new state)."""
+
+    @staticmethod
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    @staticmethod
+    def add(ef_state, grads):
+        return jax.tree.map(lambda e, g: g.astype(jnp.float32) + e, ef_state, grads)
+
+    @staticmethod
+    def update(corrected, synced):
+        # residual = what we wanted to send minus what the lossy ring delivered
+        return jax.tree.map(lambda c, s: c - s.astype(jnp.float32), corrected, synced)

@@ -1,0 +1,13 @@
+"""LR schedules."""
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, base_lr, warmup_steps, total_steps, min_ratio=0.1):
+    t = step.astype(jnp.float32)
+    warm = base_lr * jnp.minimum(t / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (t - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(t < warmup_steps, warm, base_lr * cos)

@@ -1,0 +1,114 @@
+"""Batched serving engine: prefill-as-decode + wave batching.
+
+A fixed-width batch of slots decodes in lock-step through the compiled
+``serve_step``; when a wave of requests completes, the caches are reset and
+the next wave is admitted (wave batching — the correct scale-down of
+continuous batching given a batch-shared cache position; per-slot cache
+invalidation is the production extension and is what the decode shapes
+exercise in the dry-run).  Prompts are replayed through decode steps (exact
+at small scale; the 32k-prefill *shape* exercises the dedicated prefill
+path).  Greedy sampling; deterministic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..mesh.api import ParallelCtx
+from ..models import lm_caches, lm_decode_step
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list
+    max_new: int = 16
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, ctx: ParallelCtx | None = None,
+                 batch_slots: int = 4, capacity: int = 128, eos: int | None = None):
+        self.cfg = cfg
+        self.ctx = ctx or ParallelCtx()
+        self.params = params
+        self.B = batch_slots
+        self.capacity = capacity
+        self.eos = eos
+        self.caches = lm_caches(cfg, batch_slots, capacity=capacity, ctx=self.ctx)
+        self.pos = np.zeros(batch_slots, dtype=np.int64)  # per-slot next pos
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.queue: list[Request] = []
+        self._step = jax.jit(
+            lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg, self.ctx)
+        )
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_wave(self):
+        """Admit a new wave only when every slot is free (cache reset keeps
+        per-slot histories from leaking across requests)."""
+        if any(r is not None for r in self.slot_req):
+            return 0
+        n = 0
+        for i in range(self.B):
+            if self.queue:
+                self.slot_req[i] = self.queue.pop(0)
+                n += 1
+        if n:
+            self.caches = lm_caches(
+                self.cfg, self.B, capacity=self.capacity, ctx=self.ctx
+            )
+        return n
+
+    def run(self, *, max_steps: int = 256) -> list[Request]:
+        """Drain the queue; returns completed requests."""
+        completed: list[Request] = []
+        self._fill_wave()
+        tok_shape = (self.B, self.cfg.n_codebooks) if self.cfg.n_codebooks > 1 else (self.B,)
+        cur = np.zeros(tok_shape, dtype=np.int32)
+        cursor = np.zeros(self.B, dtype=np.int64)  # prompt read positions
+        pos = 0
+        steps = 0
+        while (any(r is not None for r in self.slot_req) or self.queue) and steps < max_steps:
+            # choose the input token per slot: prompt replay or last sample
+            for i, req in enumerate(self.slot_req):
+                if req is None:
+                    cur[i] = 0
+                elif cursor[i] < len(req.prompt):
+                    cur[i] = req.prompt[int(cursor[i])]
+                # else: keep the sampled token from last iteration
+            logits, self.caches = self._step(
+                self.params, self.caches, jnp.asarray(cur), jnp.asarray(pos)
+            )
+            nxt = np.asarray(jnp.argmax(logits, axis=1))  # (B[, n_cb])
+            for i, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                cursor[i] += 1
+                if cursor[i] >= len(req.prompt):
+                    tok = nxt[i]
+                    req.out.append(tok.tolist() if tok.ndim else int(tok))
+                    cur[i] = tok
+                    hit_eos = (
+                        self.eos is not None and np.ndim(tok) == 0 and int(tok) == self.eos
+                    )
+                    if len(req.out) >= req.max_new or hit_eos:
+                        req.done = True
+                        completed.append(req)
+                        self.slot_req[i] = None
+                        cursor[i] = 0
+            pos += 1
+            steps += 1
+            if all(r is None for r in self.slot_req) and self.queue:
+                if self._fill_wave():
+                    pos = 0
+                    cur[:] = 0
+                    cursor[:] = 0
+        return completed

@@ -1,0 +1,24 @@
+"""Test configuration.
+
+Multi-device SMI tests need >1 device, so the suite runs with 8 host
+placeholder devices (the paper's 8-FPGA testbed size).  This is deliberately
+NOT the 512-device production mesh — that count is reserved for
+``launch/dryrun.py`` per its contract; smoke tests and reference checks here
+only assume ``jax.device_count() >= 1`` and build small meshes explicitly.
+"""
+
+import os
+
+# Must run before jax initializes its backends (first jax import in-session).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def devices8():
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 host devices")
+    return jax.devices()[:8]

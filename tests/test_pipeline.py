@@ -1,0 +1,106 @@
+"""Pipeline parallelism over SMI channels: forward correctness + AD."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import Communicator, make_test_mesh
+from repro.core.pipeline import pipeline_apply, pipeline_loss
+
+PP = 4
+
+
+@pytest.fixture(scope="module")
+def chain4():
+    mesh = make_test_mesh((PP,), ("pp",))
+    comm = Communicator.create("pp", (PP,))
+    return mesh, comm
+
+
+def _stage(params, x):
+    w, b = params
+    return jnp.tanh(x @ w + b)
+
+
+def test_pipeline_forward_matches_sequential(chain4):
+    mesh, comm = chain4
+    rng = np.random.RandomState(0)
+    D, M, mb = 6, 5, 3
+    Ws = rng.randn(PP, D, D).astype(np.float32) * 0.4
+    Bs = rng.randn(PP, D).astype(np.float32) * 0.1
+    X = rng.randn(M, mb, D).astype(np.float32)
+
+    # oracle: sequential application of all 4 stages
+    want = X.copy()
+    for s in range(PP):
+        want = np.tanh(want @ Ws[s] + Bs[s])
+
+    def fn(w, b, x):
+        out = pipeline_apply(_stage, (w[0], b[0]), x, comm)
+        return out[None]
+
+    out = jax.jit(
+        jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(P("pp"), P("pp"), P()),
+            out_specs=P("pp"),
+        )
+    )(jnp.asarray(Ws), jnp.asarray(Bs), jnp.asarray(X))
+    got = np.asarray(out[PP - 1])  # delivered at the last stage
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_grad_flows_to_all_stages(chain4):
+    """AD transposes the channel hops into the reverse pipeline: every
+    stage's parameters must receive a nonzero gradient."""
+    mesh, comm = chain4
+    rng = np.random.RandomState(1)
+    D, M, mb = 4, 4, 2
+    Ws = rng.randn(PP, D, D).astype(np.float32) * 0.4
+    Bs = rng.randn(PP, D).astype(np.float32) * 0.1
+    X = rng.randn(M, mb, D).astype(np.float32)
+    Y = rng.randn(M, mb, D).astype(np.float32)
+
+    def loss_rankwise(w, b, x, y):
+        return pipeline_loss(
+            _stage,
+            lambda p, t: jnp.mean((p - t) ** 2),
+            (w[0], b[0]),
+            x, y, comm,
+        )
+
+    def value_and_grads(w, b, x, y):
+        def f(wb):
+            return loss_rankwise(wb[0], wb[1], x, y)
+
+        l, g = jax.value_and_grad(f)((w, b))
+        return l[None], g[0], g[1]
+
+    l, gw, gb = jax.jit(
+        jax.shard_map(
+            value_and_grads, mesh=mesh,
+            in_specs=(P("pp"), P("pp"), P(), P()),
+            out_specs=(P("pp"), P("pp"), P("pp")),
+        )
+    )(jnp.asarray(Ws), jnp.asarray(Bs), jnp.asarray(X), jnp.asarray(Y))
+
+    # loss identical on every stage (psum'd)
+    lv = np.asarray(l)
+    np.testing.assert_allclose(lv, lv[0], rtol=1e-6)
+    gw = np.asarray(gw)
+    for s in range(PP):
+        assert np.abs(gw[s]).max() > 0, f"stage {s} got zero gradient"
+
+    # gradient oracle: plain sequential model
+    def seq_loss(wb):
+        w, b = wb
+        h = jnp.asarray(X)
+        for s in range(PP):
+            h = jnp.tanh(h @ w[s] + b[s])
+        return jnp.mean(jnp.mean((h - Y) ** 2, axis=(1, 2)))
+
+    l0, (gw0, gb0) = jax.value_and_grad(seq_loss)((jnp.asarray(Ws), jnp.asarray(Bs)))
+    np.testing.assert_allclose(lv[0], np.asarray(l0), rtol=1e-5)
+    np.testing.assert_allclose(gw, np.asarray(gw0), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,123 @@
+"""Hypothesis property tests on system invariants (deliverable c):
+algebraic laws the streamed collectives must satisfy for any data."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    Communicator,
+    make_test_mesh,
+    run_spmd,
+    stream_allgather,
+    stream_allreduce,
+    stream_alltoall,
+    stream_gather,
+    stream_p2p,
+    stream_reduce_scatter,
+    stream_scatter,
+)
+
+PP = 8
+
+
+@pytest.fixture(scope="module")
+def ring8():
+    return make_test_mesh((PP,), ("x",)), Communicator.create("x", (PP,))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), m=st.integers(1, 4))
+def test_property_rs_then_ag_is_allreduce(seed, m):
+    """reduce_scatter ∘ all_gather == all_reduce (the ring identity)."""
+    mesh, comm = make_test_mesh((PP,), ("x",)), Communicator.create("x", (PP,))
+    rng = np.random.RandomState(seed)
+    x = rng.randn(PP, PP * m, 3).astype(np.float32)
+
+    def fn(v):
+        rs = stream_reduce_scatter(v[0], comm)
+        ag = stream_allgather(rs, comm)
+        ar = stream_allreduce(v[0], comm)
+        return ag[None], ar[None]
+
+    ag, ar = run_spmd(fn, mesh, P("x"), (P("x"), P("x")), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(ag), np.asarray(ar), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_alltoall_involution(seed):
+    """alltoall(alltoall(x)) == x (transpose is an involution)."""
+    mesh, comm = make_test_mesh((PP,), ("x",)), Communicator.create("x", (PP,))
+    rng = np.random.RandomState(seed)
+    x = rng.randn(PP, PP, 2, 2).astype(np.float32)
+
+    def fn(v):
+        return stream_alltoall(stream_alltoall(v[0], comm), comm)[None]
+
+    y = run_spmd(fn, mesh, P("x"), P("x"), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), x, rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), root=st.integers(0, PP - 1))
+def test_property_scatter_gather_roundtrip(seed, root):
+    """gather(scatter(x)) == x at the root, for any root."""
+    mesh, comm = make_test_mesh((PP,), ("x",)), Communicator.create("x", (PP,))
+    rng = np.random.RandomState(seed)
+    full = rng.randn(PP * 3, 2).astype(np.float32)
+
+    def fn(v):
+        mine = stream_scatter(v, comm, root=root)
+        back = stream_gather(mine, comm, root=root)
+        return back[None]
+
+    y = run_spmd(fn, mesh, P(None), P("x"), jnp.asarray(full))
+    got = np.asarray(y).reshape(PP, PP * 3, 2)[root]
+    np.testing.assert_allclose(got, full, rtol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    src=st.integers(0, PP - 1),
+    dst=st.integers(0, PP - 1),
+    n_chunks=st.sampled_from([1, 2, 4]),
+)
+def test_property_p2p_chunk_invariance(seed, src, dst, n_chunks):
+    """Chunk count is an optimisation parameter: it never changes payload
+    (the paper's buffer-size correctness rule, §3.3/§4.2)."""
+    mesh, comm = make_test_mesh((PP,), ("x",)), Communicator.create("x", (PP,))
+    rng = np.random.RandomState(seed)
+    x = rng.randn(PP, 8, 2).astype(np.float32)
+
+    def fn(v):
+        return stream_p2p(v[0], src=src, dst=dst, comm=comm,
+                          n_chunks=n_chunks)[None]
+
+    y = run_spmd(fn, mesh, P("x"), P("x"), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y)[dst], x[src], rtol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_allreduce_linearity(seed):
+    """AR(a + b) == AR(a) + AR(b) (reduction is linear)."""
+    mesh, comm = make_test_mesh((PP,), ("x",)), Communicator.create("x", (PP,))
+    rng = np.random.RandomState(seed)
+    a = rng.randn(PP, 6).astype(np.float32)
+    b = rng.randn(PP, 6).astype(np.float32)
+
+    def fn(u, v):
+        lhs = stream_allreduce(u[0] + v[0], comm)
+        rhs = stream_allreduce(u[0], comm) + stream_allreduce(v[0], comm)
+        return lhs[None], rhs[None]
+
+    lhs, rhs = run_spmd(fn, mesh, (P("x"), P("x")), (P("x"), P("x")),
+                        jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5,
+                               atol=1e-5)

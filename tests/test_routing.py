@@ -1,0 +1,155 @@
+"""Topology + route-generator unit and property tests (paper §4.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Topology,
+    compute_route_table,
+    channel_dependency_acyclic,
+    physical_link_map,
+)
+
+
+def test_torus_2d_links():
+    t = Topology.torus((2, 4))
+    assert t.n_ranks == 8
+    # rank 0 = (0,0): +x -> (1,0)=4, +y -> (0,1)=1, -y -> (0,3)=3
+    assert set(t.neighbors(0)) == {4, 1, 3}
+    assert t.is_connected()
+    # paper setup: every FPGA wired to 4 distinct others in the 8-node torus
+    t8 = Topology.torus((2, 4))
+    assert all(len(t8.neighbors(r)) <= 4 for r in range(8))
+
+
+def test_bus_topology():
+    b = Topology.bus(8)
+    assert b.neighbors(0) == (1,)
+    assert b.neighbors(7) == (6,)
+    assert b.neighbors(3) == (4, 2)
+    assert b.is_connected()
+    assert b.diameter() == 7
+
+
+def test_ring_vs_bus_diameter():
+    assert Topology.ring(8).diameter() == 4
+    assert Topology.bus(8).diameter() == 7
+
+
+def test_json_roundtrip():
+    t = Topology.torus((2, 4))
+    s = t.to_json()
+    t2 = Topology.from_json(s)
+    assert t2.n_ranks == t.n_ranks
+    for r in range(t.n_ranks):
+        assert set(t2.neighbors(r)) == set(t.neighbors(r))
+
+
+def test_dor_paths_valid_torus():
+    t = Topology.torus((4, 4))
+    rt = compute_route_table(t)
+    for s in range(16):
+        for d in range(16):
+            p = rt.path(s, d)
+            assert p[0] == s and p[-1] == d
+            for a, b in zip(p[:-1], p[1:]):
+                assert b in t.neighbors(a), f"hop {a}->{b} not a link"
+            assert len(p) - 1 <= t.diameter()
+
+
+def test_dor_is_shortest_on_torus():
+    from repro.core.routing import bfs_dists
+
+    t = Topology.torus((2, 4))
+    rt = compute_route_table(t)
+    for s in range(8):
+        dist = bfs_dists(t, s)
+        for d in range(8):
+            assert rt.n_hops(s, d) == dist[d]
+
+
+def test_deadlock_analysis():
+    """Dally–Seitz CDG analysis.
+
+    Wrap-around DOR on a torus has *cyclic* channel dependencies (the classic
+    result — wormhole routers need virtual channels/datelines); the checker
+    must detect that.  Acyclic cases (bus, no-wrap paths) must pass.  Our
+    static ppermute schedules are globally synchronous (TDM over links), so
+    they are deadlock-free regardless — the CDG check guards the *dynamic*
+    router when given non-torus custom tables (see core/router.py docs).
+    """
+    rt_torus = compute_route_table(Topology.torus((4, 4)))
+    assert not channel_dependency_acyclic(rt_torus)  # wrap cycles detected
+    rt_bus = compute_route_table(Topology.bus(8))
+    assert channel_dependency_acyclic(rt_bus)
+
+
+def test_bfs_routes_on_bus():
+    b = Topology.bus(8)
+    rt = compute_route_table(b)
+    assert rt.path(0, 7) == list(range(8))
+    assert rt.path(5, 2) == [5, 4, 3, 2]
+    assert channel_dependency_acyclic(rt)
+
+
+def test_route_recompute_without_rebuild():
+    """Paper: change topology => recompute tables only."""
+    t = Topology.torus((2, 4))
+    rt_torus = compute_route_table(t)
+    rt_bus = compute_route_table(Topology.bus(8))
+    # 0 -> 5: short on torus, long on bus
+    assert rt_torus.n_hops(0, 5) < rt_bus.n_hops(0, 5)
+
+
+def test_physical_link_map():
+    m = physical_link_map((2, 4))
+    # (0,0)->(0,1) is +1 in dim 1 => link id 2
+    assert m[(0, 1)] == 2
+    # (0,1)->(0,0) is -1 in dim 1 => link id 3
+    assert m[(1, 0)] == 3
+    # dim 0 has size 2: +1 and -1 coincide; entry exists
+    assert (0, 4) in m
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dx=st.sampled_from([2, 3, 4]),
+    dy=st.sampled_from([2, 3, 4, 5]),
+    data=st.data(),
+)
+def test_property_dor_valid_and_minimal(dx, dy, data):
+    from repro.core.routing import bfs_dists
+
+    t = Topology.torus((dx, dy))
+    rt = compute_route_table(t)
+    s = data.draw(st.integers(0, t.n_ranks - 1))
+    d = data.draw(st.integers(0, t.n_ranks - 1))
+    p = rt.path(s, d)
+    assert p[0] == s and p[-1] == d
+    assert len(set(p)) == len(p), "path revisits a rank"
+    for a, b in zip(p[:-1], p[1:]):
+        assert b in t.neighbors(a)
+    assert len(p) - 1 == bfs_dists(t, s)[d]
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 12), data=st.data())
+def test_property_random_graph_routes(n, data):
+    # random connected graph: start from a path, add random extra edges
+    extra = data.draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            max_size=8,
+        )
+    )
+    edges = [(i, i + 1) for i in range(n - 1)]
+    edges += [(a, b) for a, b in extra if a != b]
+    t = Topology.from_edges(n, edges)
+    rt = compute_route_table(t)
+    for s in range(n):
+        for d in range(n):
+            p = rt.path(s, d)
+            assert p[0] == s and p[-1] == d
+            for a, b in zip(p[:-1], p[1:]):
+                assert b in t.neighbors(a)

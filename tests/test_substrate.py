@@ -1,0 +1,190 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint, FT, serving,
+and a short end-to-end training run (loss must decrease)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_arch, smoke
+from repro.configs.base import ShapeConfig
+from repro.core import make_test_mesh
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.ft import StepWatchdog, best_mesh_shape, elastic_restart_plan, run_with_restarts
+from repro.launch.steps import TrainSettings, build_train
+from repro.launch.train import train_loop
+from repro.mesh.api import ParallelCtx
+from repro.models import init_lm
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_warmup
+from repro.serving import Request, ServeEngine
+
+
+def test_adamw_descends_quadratic():
+    p = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(p)
+    for _ in range(200):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        p, opt = adamw_update(p, g, opt, lr=0.1, weight_decay=0.0)
+    assert float(jnp.abs(p["w"]).max()) < 0.05
+
+
+def test_clip_and_schedule():
+    g = {"a": jnp.full((4,), 10.0)}
+    gc, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    _, n2 = clip_by_global_norm(gc, 1.0)
+    assert float(n2) == pytest.approx(1.0, rel=1e-5)
+    lr0 = cosine_warmup(jnp.asarray(0), base_lr=1.0, warmup_steps=10, total_steps=100)
+    lr5 = cosine_warmup(jnp.asarray(5), base_lr=1.0, warmup_steps=10, total_steps=100)
+    lr100 = cosine_warmup(jnp.asarray(100), base_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr0) == 0.0 and float(lr5) == pytest.approx(0.5)
+    assert float(lr100) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_pipeline_deterministic_and_shifted():
+    p1 = SyntheticTokenPipeline(100, 16, 4, seed=7)
+    p2 = SyntheticTokenPipeline(100, 16, 4, seed=7)
+    a, b = p1.next(), p2.next()
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+    p1.close()
+    p2.close()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"w": jnp.arange(6.0).reshape(2, 3), "n": jnp.asarray(3)}
+    ck.save(state, 10)
+    ck.save(state, 20, async_=True)
+    ck.wait()
+    assert ck.steps() == [10, 20]
+    restored, manifest = ck.restore(state)
+    np.testing.assert_allclose(np.asarray(restored["w"]), np.asarray(state["w"]))
+    assert manifest["step"] == 20
+    ck.save(state, 30)
+    assert ck.steps() == [20, 30]  # keep=2 GC'd step 10
+
+
+def test_checkpoint_restart_on_failure(tmp_path):
+    """Injected failure -> driver restores latest checkpoint and resumes."""
+    ck = Checkpointer(str(tmp_path))
+    calls = []
+
+    def make_loop(state, start):
+        calls.append(start)
+        for step in range(start, 10):
+            state = {"x": state["x"] + 1}
+            if step == 4 and len(calls) == 1:
+                raise RuntimeError("simulated node loss")
+            if step % 2 == 0:
+                ck.save(state, step)
+        return state
+
+    final, restarts = run_with_restarts(make_loop, ck, {"x": jnp.asarray(0)})
+    assert restarts == 1
+    assert calls == [0, 2]  # resumed from the last completed checkpoint
+    assert int(final["x"]) >= 6
+
+
+def test_watchdog_flags_straggler():
+    import time
+
+    wd = StepWatchdog(threshold=5.0, alpha=0.5)
+    wd.start()
+    for s in range(3):
+        time.sleep(0.01)
+        assert not wd.lap(s)
+    time.sleep(0.3)  # 30x slower
+    assert wd.lap(3)
+    assert wd.events and wd.events[0]["step"] == 3
+
+
+def test_elastic_plan():
+    plan = elastic_restart_plan(8, 6, prefer_model=4)
+    assert plan["mesh_shape"] == (2, 3)  # (data, model), model=3 divides 6
+    assert plan["topology"].n_ranks == 6
+    assert best_mesh_shape(8) == (2, 4)
+    assert best_mesh_shape(7) == (7, 1)
+
+
+def test_serve_engine_waves():
+    cfg = smoke(get_arch("yi-6b"))
+    params = init_lm(jax.random.PRNGKey(0), cfg, ParallelCtx())
+    eng = ServeEngine(cfg, params, batch_slots=2, capacity=64)
+    for uid in range(4):  # 2 waves of 2
+        eng.submit(Request(uid=uid, prompt=[5, 7, 9], max_new=4))
+    done = eng.run(max_steps=200)
+    assert len(done) == 4
+    for r in done:
+        assert len(r.out) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in r.out)
+    # determinism: same engine config reproduces wave-1 outputs
+    eng2 = ServeEngine(cfg, params, batch_slots=2, capacity=64)
+    for uid in range(2):
+        eng2.submit(Request(uid=uid, prompt=[5, 7, 9], max_new=4))
+    done2 = eng2.run(max_steps=100)
+    assert done2[0].out == done[0].out
+
+
+@pytest.mark.parametrize("comm_mode", ["bulk", "smi"])
+def test_train_loop_loss_decreases(tmp_path, comm_mode):
+    """End-to-end: 16 steps of the full driver on a (2,4) mesh; CE drops."""
+    cfg = smoke(get_arch("yi-6b"))
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+    st = TrainSettings(comm_mode=comm_mode, remat="nothing", loss_chunks=1,
+                       base_lr=3e-2, warmup_steps=3, total_steps=200)
+    _, hist = train_loop(
+        cfg, mesh, shape, st, steps=32, ckpt_dir=str(tmp_path),
+        ckpt_every=10, log_every=4,
+    )
+    first = hist[0]["ce"]
+    last = min(h["ce"] for h in hist[-3:])
+    assert last < first - 0.1, f"CE did not decrease: {first} -> {last}"
+    ck = Checkpointer(str(tmp_path))
+    assert ck.latest_step() == 32
+
+
+def test_train_restart_resumes(tmp_path):
+    """Injected failure mid-train -> restart from checkpoint continues."""
+    cfg = smoke(get_arch("yi-6b"))
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    shape = ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
+    st = TrainSettings(comm_mode="bulk", remat="nothing", loss_chunks=1,
+                       base_lr=5e-3, warmup_steps=2, total_steps=12)
+    ck = Checkpointer(str(tmp_path))
+
+    art_state = {"attempts": 0}
+
+    def make_loop(state, start):
+        art_state["attempts"] += 1
+        fail = 7 if art_state["attempts"] == 1 else None
+        s, _ = train_loop(
+            cfg, mesh, shape, st, steps=12, ckpt_dir=str(tmp_path),
+            ckpt_every=4, log_every=100, state=state, start_step=start,
+            fail_at=fail,
+        )
+        return s
+
+    # state_like for restore structure: fresh init
+    art = build_train(cfg, mesh, shape, st)
+    state0 = art["init_state"](0)
+    final, restarts = run_with_restarts(make_loop, ck, state0)
+    assert restarts == 1
+    assert ck.latest_step() == 12
+
+
+def test_compressed_grad_training_step():
+    """int8-compressed SMI gradient rings still train (loss finite+drops)."""
+    cfg = smoke(get_arch("yi-6b"))
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    shape = ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
+    st = TrainSettings(comm_mode="smi", remat="nothing", loss_chunks=1,
+                       base_lr=1e-2, warmup_steps=1, total_steps=8,
+                       compressed_grads=True)
+    _, hist = train_loop(cfg, mesh, shape, st, steps=8, log_every=7)
+    assert np.isfinite(hist[-1]["ce"])
+    assert hist[-1]["ce"] < hist[0]["ce"] + 0.1
