@@ -8,8 +8,13 @@ path).  The paper's claims, reproduced structurally:
   * streamed bandwidth is independent of hop count (pipelining),
   * staged bandwidth degrades ~linearly with hops.
 
+``--transport`` sweeps the streamed path over the pluggable backends
+(static ppermute schedule vs the dynamic packet router end to end).
+
 Derived column: TPU-v5e time model = steps x (chunk_bytes / ICI_BW).
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +25,10 @@ from jax.sharding import PartitionSpec as P
 from repro.core import Communicator, Topology, make_test_mesh, stream_p2p
 from repro.core.streaming import _mask_sel, _pvary
 
-from .common import ICI_BW, csv_row, timeit
+from .common import ICI_BW, csv_row, make_bench_transport, timeit
+
+#: packet payload for the p2p train (scaled from the paper's 28 B packet)
+PACKET_BENCH_ELEMS = 4096
 
 
 def staged_p2p(x, *, src, dst, comm):
@@ -32,7 +40,7 @@ def staged_p2p(x, *, src, dst, comm):
     return buf
 
 
-def run():
+def run(transports=("static", "packet")):
     mesh = make_test_mesh((8,), ("x",))
     comm = Communicator.create("x", (8,), topology=Topology.bus(8))
     rows = []
@@ -41,16 +49,7 @@ def run():
         elems = (1 << log2_kb) * 256      # f32
         x = jnp.ones((8, elems), jnp.float32)
         for dst, hops in [(1, 1), (4, 4), (7, 7)]:
-            f_smi = jax.jit(jax.shard_map(
-                lambda v: stream_p2p(v[0], src=0, dst=dst, comm=comm,
-                                     n_chunks=n_chunks)[None],
-                mesh=mesh, in_specs=P("x"), out_specs=P("x")))
-            f_stg = jax.jit(jax.shard_map(
-                lambda v: staged_p2p(v[0], src=0, dst=dst, comm=comm)[None],
-                mesh=mesh, in_specs=P("x"), out_specs=P("x")))
             mb = elems * 4 / 2**20
-            t_smi = timeit(f_smi, x)
-            t_stg = timeit(f_stg, x)
             # v5e model: pipelined = (n_chunks + hops - 1) chunk-hops;
             # staged = hops full-message serial hops
             chunk_b = elems * 4 / n_chunks
@@ -58,20 +57,41 @@ def run():
             model_stg = hops * elems * 4 / ICI_BW
             bw_smi = elems * 4 / model_smi / 1e9
             bw_stg = elems * 4 / model_stg / 1e9
-            csv_row(
-                f"bandwidth_fig9,{mb:.2f}MB,hops={hops},smi",
-                t_smi * 1e6,
-                f"v5e_model_GBps={bw_smi:.1f}",
-            )
+            for tname in transports:
+                f_smi = jax.jit(jax.shard_map(
+                    lambda v, tn=tname: stream_p2p(
+                        v[0], src=0, dst=dst, comm=comm, n_chunks=n_chunks,
+                        transport=make_bench_transport(tn, pkt_elems=PACKET_BENCH_ELEMS),
+                    )[None],
+                    mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+                t_smi = timeit(f_smi, x)
+                csv_row(
+                    f"bandwidth_fig9,{mb:.2f}MB,hops={hops},smi[{tname}]",
+                    t_smi * 1e6,
+                    f"v5e_model_GBps={bw_smi:.1f}",
+                )
+                rows.append((mb, hops, tname, t_smi, bw_smi))
+            f_stg = jax.jit(jax.shard_map(
+                lambda v: staged_p2p(v[0], src=0, dst=dst, comm=comm)[None],
+                mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+            t_stg = timeit(f_stg, x)
             csv_row(
                 f"bandwidth_fig9,{mb:.2f}MB,hops={hops},staged",
                 t_stg * 1e6,
                 f"v5e_model_GBps={bw_stg:.1f}",
             )
-            rows.append((mb, hops, t_smi, t_stg, bw_smi, bw_stg))
+            rows.append((mb, hops, "staged", t_stg, bw_stg))
     # paper claim check: smi bandwidth roughly hop-independent (model exact)
     return rows
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--transport", default="static,packet",
+                    help="comma-separated transport backends to sweep")
+    args = ap.parse_args(argv)
+    run(transports=tuple(args.transport.split(",")))
+
+
 if __name__ == "__main__":
-    run()
+    main()

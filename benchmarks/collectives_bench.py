@@ -1,11 +1,21 @@
 """Fig. 10 / Fig. 11: Bcast and Reduce vs message size, torus vs bus.
 
-Compared: SMI streamed (pipelined chain, the paper's linear scheme),
-host-staged (serial bulk sends — the MPI+OpenCL analogue), and the
-beyond-paper binomial tree.  The paper's observations to reproduce:
-streamed collectives beat staged for all sizes; topology (torus vs bus)
-barely matters for the streamed version; trees win at small sizes.
+Compared: SMI streamed (pipelined chain, the paper's linear scheme) under
+each transport backend (``--transport static,packet,fused``), host-staged
+(serial bulk sends — the MPI+OpenCL analogue), and the beyond-paper
+binomial tree.  The paper's observations to reproduce: streamed collectives
+beat staged for all sizes; topology (torus vs bus) barely matters for the
+streamed version; trees win at small sizes.  The per-backend sweep adds the
+repo's own claim: one collective call site, three interchangeable
+transports, directly comparable timings.
+
+Note the fused backend only diverges from static on the ring-reduce
+``shift_accumulate`` hot path — Bcast/Reduce (pure permutes) time the same
+schedule under both, so the sweep also times AllReduce, where the fused
+column measures the fused code.
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -17,42 +27,46 @@ from repro.core import (
     make_test_mesh,
     staged_bcast,
     staged_reduce,
+    stream_allreduce,
     stream_bcast,
     stream_reduce,
     tree_bcast,
     tree_reduce,
 )
-
-from .common import ICI_BW, csv_row, timeit
+from .common import ICI_BW, csv_row, make_bench_transport, timeit
 
 PP = 8
 
 
-def run():
+def run(transports=("static", "packet", "fused"), sizes=(4, 8, 11)):
     mesh = make_test_mesh((PP,), ("x",))
     comms = {
         "torus": Communicator.create("x", (PP,)),
         "bus": Communicator.create("x", (PP,), topology=Topology.bus(PP)),
     }
     out = []
-    for log2_kb in [4, 8, 11]:
+    table = {}
+    for log2_kb in sizes:
         elems = (1 << log2_kb) * 256
         x = jnp.ones((PP, elems), jnp.float32)
         n_chunks = 16
         mb = elems * 4 / 2**20
         for topo, comm in comms.items():
-            variants = {
-                "smi": lambda v, c=comm: stream_bcast(
-                    v[0].reshape(n_chunks, -1), c, root=0, n_chunks=n_chunks
-                ).reshape(1, -1),
-                "staged": lambda v, c=comm: staged_bcast(v[0], c, root=0)[None],
-                "tree": lambda v, c=comm: tree_bcast(v[0], c, root=0)[None],
-            }
+            variants = {}
+            for tname in transports:
+                variants[f"smi[{tname}]"] = (
+                    lambda v, c=comm, tn=tname: stream_bcast(
+                        v[0].reshape(n_chunks, -1), c, root=0,
+                        n_chunks=n_chunks, transport=make_bench_transport(tn),
+                    ).reshape(1, -1)
+                )
+            variants["staged"] = lambda v, c=comm: staged_bcast(v[0], c, root=0)[None]
+            variants["tree"] = lambda v, c=comm: tree_bcast(v[0], c, root=0)[None]
             for name, fn in variants.items():
                 f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
                                           out_specs=P("x")))
                 t = timeit(f, x)
-                if name == "smi":
+                if name.startswith("smi"):
                     steps = n_chunks + PP - 2
                     model = steps * (elems * 4 / n_chunks) / ICI_BW
                 elif name == "staged":
@@ -64,22 +78,74 @@ def run():
                 csv_row(f"bcast_fig10,{mb:.2f}MB,{topo},{name}", t * 1e6,
                         f"v5e_model_us={model * 1e6:.1f}")
                 out.append(("bcast", mb, topo, name, t, model))
+                table[("bcast", mb, topo, name)] = t
 
-            rvariants = {
-                "smi": lambda v, c=comm: stream_reduce(
-                    v[0].reshape(n_chunks, -1), c, root=0, n_chunks=n_chunks
-                ).reshape(1, -1),
-                "staged": lambda v, c=comm: staged_reduce(v[0], c, root=0)[None],
-                "tree": lambda v, c=comm: tree_reduce(v[0], c, root=0)[None],
-            }
+            rvariants = {}
+            for tname in transports:
+                rvariants[f"smi[{tname}]"] = (
+                    lambda v, c=comm, tn=tname: stream_reduce(
+                        v[0].reshape(n_chunks, -1), c, root=0,
+                        n_chunks=n_chunks, transport=make_bench_transport(tn),
+                    ).reshape(1, -1)
+                )
+            rvariants["staged"] = lambda v, c=comm: staged_reduce(v[0], c, root=0)[None]
+            rvariants["tree"] = lambda v, c=comm: tree_reduce(v[0], c, root=0)[None]
             for name, fn in rvariants.items():
                 f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
                                           out_specs=P("x")))
                 t = timeit(f, x)
                 csv_row(f"reduce_fig11,{mb:.2f}MB,{topo},{name}", t * 1e6, "")
                 out.append(("reduce", mb, topo, name, t, None))
+                table[("reduce", mb, topo, name)] = t
+
+            # ring AllReduce: the shift_accumulate hot path — the one
+            # collective where the fused backend's kernel actually runs
+            if topo == "torus":
+                for tname in transports:
+                    fn = (lambda v, c=comm, tn=tname: stream_allreduce(
+                        v[0], c, transport=make_bench_transport(tn))[None])
+                    f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
+                                              out_specs=P("x")))
+                    t = timeit(f, x)
+                    name = f"smi[{tname}]"
+                    csv_row(f"allreduce_ring,{mb:.2f}MB,{topo},{name}",
+                            t * 1e6, "")
+                    out.append(("allreduce", mb, topo, name, t, None))
+                    table[("allreduce", mb, topo, name)] = t
+
+    _print_backend_table(table, transports)
     return out
 
 
+def _print_backend_table(table, transports):
+    """Per-backend timing table: same collective call site, backend swapped
+    by string key (the acceptance artefact of the transport refactor)."""
+    names = [f"smi[{t}]" for t in transports] + ["staged", "tree"]
+    combos = sorted({(op, mb, topo) for (op, mb, topo, _n) in table})
+    hdr = f"# {'collective':<22}" + "".join(f"{n:>16}" for n in names)
+    print(hdr)
+    for op, mb, topo, in combos:
+        cells = []
+        for n in names:
+            t = table.get((op, mb, topo, n))
+            cells.append(f"{t * 1e6:>14.1f}us" if t is not None else f"{'-':>16}")
+        print(f"# {op + ',' + f'{mb:.2f}MB,' + topo:<22}" + "".join(cells))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--transport", default="static,packet,fused",
+        help="comma-separated transport backends to sweep",
+    )
+    ap.add_argument("--sizes", default="4,8,11",
+                    help="comma-separated log2(KB) message sizes")
+    args = ap.parse_args(argv)
+    run(
+        transports=tuple(args.transport.split(",")),
+        sizes=tuple(int(s) for s in args.sizes.split(",")),
+    )
+
+
 if __name__ == "__main__":
-    run()
+    main()

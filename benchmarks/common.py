@@ -36,3 +36,17 @@ def timeit(fn, *args, warmup=2, iters=5):
 
 def csv_row(name, us_per_call, derived=""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def make_bench_transport(name, *, pkt_elems=2048):
+    """Backend instance for a --transport sweep: packet gets a
+    benchmark-sized payload (the 28 B packet of §4.2 scaled so a chunk is a
+    few dozen packets); fused runs through the Pallas interpreter off-TPU
+    so the fused code path is what gets timed."""
+    from repro.transport import get_transport
+
+    if name == "packet":
+        return get_transport(name, pkt_elems=pkt_elems)
+    if name == "fused":
+        return get_transport(name, interpret=jax.default_backend() != "tpu")
+    return get_transport(name)

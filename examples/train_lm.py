@@ -26,7 +26,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--full-100m", action="store_true")
-    ap.add_argument("--comm-mode", default="smi")
+    ap.add_argument("--comm-mode", default="smi",
+                    help="smi | smi:static | smi:packet | smi:fused | bulk")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     args = ap.parse_args()
 

@@ -1,0 +1,10 @@
+"""repro: SMI (Streaming Message Interface) rendered for JAX TPU meshes.
+
+Importing the package installs the JAX version-compat shims (see
+:mod:`repro.compat`) so the modern API surface (``jax.shard_map`` et al.)
+is available on every supported runtime before any submodule uses it.
+"""
+
+from . import compat as _compat
+
+_compat.install()

@@ -1,4 +1,5 @@
 from .base import ModelConfig, ShapeConfig, SHAPES
-from .registry import ARCHS, get_arch, smoke, cells
+from .registry import ARCHS, COMM_MODES, TRANSPORT_BACKENDS, get_arch, smoke, cells
 
-__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_arch", "smoke", "cells"]
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "COMM_MODES",
+           "TRANSPORT_BACKENDS", "get_arch", "smoke", "cells"]

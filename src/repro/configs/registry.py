@@ -93,6 +93,17 @@ ARCHS: dict[str, ModelConfig] = {
 }
 
 
+#: valid ``comm_mode`` strings across launch/dry-run/benchmarks.  The
+#: ``smi:<backend>`` forms select the transport backend moving the bytes
+#: (repro/transport registry); bare ``"smi"`` means ``smi:static``.
+TRANSPORT_BACKENDS: tuple[str, ...] = ("static", "packet", "fused")
+COMM_MODES: tuple[str, ...] = (
+    "smi",
+    *(f"smi:{b}" for b in TRANSPORT_BACKENDS),
+    "bulk",
+)
+
+
 def get_arch(name: str) -> ModelConfig:
     if name not in ARCHS:
         raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")

@@ -18,6 +18,13 @@ work.  Here:
 All functions run inside ``jax.shard_map`` over the communicator's axes.
 Chunk counts, like the paper's buffer sizes, are optimisation parameters
 that never affect correctness.
+
+Every function takes a ``transport=`` keyword (a key into
+:mod:`repro.transport` or a Transport instance; default: the
+communicator's ``transport`` field).  The schedule — who sends what when —
+is backend-independent, so the same call produces bit-identical results
+over the static ppermute path, the dynamic packet router, and the fused
+Pallas path.
 """
 
 from __future__ import annotations
@@ -33,9 +40,34 @@ from .comm import Communicator
 from .streaming import _mask_sel, _pvary
 
 
-def _shift(x, comm: Communicator, step: int = 1):
-    perm = comm.ring_perm(step)
-    return jax.tree.map(lambda v: lax.ppermute(v, comm.axis, perm), x)
+def _resolve(transport, comm: Communicator):
+    from ..transport.registry import resolve_transport
+
+    return resolve_transport(transport, comm)
+
+
+def _shift(x, comm: Communicator, step: int = 1, transport=None):
+    return _resolve(transport, comm).shift(x, comm, step)
+
+
+def _schedule_loop(tp, steps: int, body, carry):
+    """Run a static schedule loop: rolled (fori_loop) on trace-time
+    backends, unrolled when the backend threads runtime counters through
+    ``stats`` (a traced value may not escape a fori_loop body).
+
+    Rolled tracing executes ``body`` once, so the backend's trace-time
+    step/byte counters would record a single iteration; the per-iteration
+    delta is scaled to the full step count afterwards.
+    """
+    if getattr(tp, "runtime_stats", False):
+        for t in range(steps):
+            carry = body(jnp.asarray(t, jnp.int32), carry)
+        return carry
+    steps0, bytes0 = tp.stats.steps, tp.stats.bytes_moved
+    carry = lax.fori_loop(0, steps, body, carry)
+    tp.stats.steps = steps0 + (tp.stats.steps - steps0) * steps
+    tp.stats.bytes_moved = bytes0 + (tp.stats.bytes_moved - bytes0) * steps
+    return carry
 
 
 def _line_perms(comm: Communicator, root: int):
@@ -57,6 +89,7 @@ def stream_allgather(
     *,
     on_chunk: Callable | None = None,
     bidir: bool = False,
+    transport=None,
 ):
     """Ring all-gather of the local shard ``x`` -> (P*m, ...).
 
@@ -67,6 +100,7 @@ def stream_allgather(
     """
     P = comm.size
     r = comm.rank()
+    t = _resolve(transport, comm)
     out = jnp.zeros((P,) + x.shape, x.dtype)
     out = jax.lax.dynamic_update_index_in_dim(out, x, r, 0)
     if on_chunk is not None:
@@ -77,7 +111,7 @@ def stream_allgather(
     if not bidir:
         buf = x
         for s in range(1, P):
-            buf = _shift(buf, comm, +1)  # buf now originated at rank r - s
+            buf = t.shift(buf, comm, +1)  # buf now originated at rank r - s
             slot = (r - s) % P
             out = jax.lax.dynamic_update_index_in_dim(out, buf, slot, 0)
             if on_chunk is not None:
@@ -88,13 +122,13 @@ def stream_allgather(
         n_up = (P - 1 + 1) // 2  # ceil((P-1)/2)
         n_down = (P - 1) // 2
         for s in range(1, n_up + 1):
-            up = _shift(up, comm, +1)
+            up = t.shift(up, comm, +1)
             slot = (r - s) % P
             out = jax.lax.dynamic_update_index_in_dim(out, up, slot, 0)
             if on_chunk is not None:
                 on_chunk(up, slot)
             if s <= n_down:
-                down = _shift(down, comm, -1)
+                down = t.shift(down, comm, -1)
                 slot2 = (r + s) % P
                 out = jax.lax.dynamic_update_index_in_dim(out, down, slot2, 0)
                 if on_chunk is not None:
@@ -111,6 +145,7 @@ def stream_reduce_scatter(
     dtype=None,
     quantize: Callable | None = None,
     dequantize: Callable | None = None,
+    transport=None,
 ):
     """Ring reduce-scatter.  ``x``: (P*m, ...) local partials -> (m, ...)
     fully-reduced block ``r``.
@@ -122,9 +157,13 @@ def stream_reduce_scatter(
 
     ``quantize``/``dequantize`` optionally compress the wire traffic
     (gradient compression; pairs with error feedback at the caller).
+
+    The uncompressed inner step is the transport's ``shift_accumulate``
+    hot path (Pallas-fused on the ``fused`` backend).
     """
     P = comm.size
     r = comm.rank()
+    t = _resolve(transport, comm)
     if compute_chunk is None:
         m = x.shape[0] // P
         xb = x.reshape((P, m) + x.shape[1:])
@@ -136,11 +175,12 @@ def stream_reduce_scatter(
     if P == 1:
         return acc
     for s in range(1, P):
-        wire = acc if quantize is None else quantize(acc)
-        wire = _shift(wire, comm, +1)
-        acc = wire if dequantize is None else dequantize(wire)
         blk = (r - s - 1) % P
-        acc = acc + compute_chunk(blk)
+        if quantize is None:
+            acc = t.shift_accumulate(acc, compute_chunk(blk), comm, +1)
+        else:
+            wire = t.shift(quantize(acc), comm, +1)
+            acc = dequantize(wire) + compute_chunk(blk)
     return acc
 
 
@@ -151,6 +191,7 @@ def stream_allreduce(
     quantize=None,
     dequantize=None,
     bidir: bool = False,
+    transport=None,
 ):
     """Ring all-reduce (RS + AG) of an arbitrary-shaped array."""
     P = comm.size
@@ -162,26 +203,29 @@ def stream_allreduce(
     pad = (-orig) % P
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    red = stream_reduce_scatter(flat, comm, quantize=quantize, dequantize=dequantize)
-    full = stream_allgather(red, comm, bidir=bidir)
+    red = stream_reduce_scatter(
+        flat, comm, quantize=quantize, dequantize=dequantize, transport=transport
+    )
+    full = stream_allgather(red, comm, bidir=bidir, transport=transport)
     if pad:
         full = full[:orig]
     return full.reshape(shape).astype(dtype)
 
 
-def stream_alltoall(x: jax.Array, comm: Communicator):
+def stream_alltoall(x: jax.Array, comm: Communicator, *, transport=None):
     """All-to-all: ``x``(P, m, ...) block d goes to rank d; returns (P, m, ...)
     where slot s holds the block sent by rank s.  P-1 direct permutes (each
     lowered by XLA to its own route on the physical torus)."""
     P = comm.size
     r = comm.rank()
+    t = _resolve(transport, comm)
     out = jnp.zeros_like(x)
     own = jax.lax.dynamic_index_in_dim(x, r, 0, keepdims=False)
     out = jax.lax.dynamic_update_index_in_dim(out, own, r, 0)
     for s in range(1, P):
         # Send the block destined to rank (r+s); it arrives from rank (r-s).
         blk = jax.lax.dynamic_index_in_dim(x, (r + s) % P, 0, keepdims=False)
-        got = lax.ppermute(blk, comm.axis, comm.ring_perm(+s))
+        got = t.shift(blk, comm, +s)
         out = jax.lax.dynamic_update_index_in_dim(out, got, (r - s) % P, 0)
     return out
 
@@ -191,7 +235,14 @@ def stream_alltoall(x: jax.Array, comm: Communicator):
 # ---------------------------------------------------------------------------
 
 
-def stream_bcast(x: jax.Array, comm: Communicator, *, root: int = 0, n_chunks: int = 1):
+def stream_bcast(
+    x: jax.Array,
+    comm: Communicator,
+    *,
+    root: int = 0,
+    n_chunks: int = 1,
+    transport=None,
+):
     """Pipelined chain broadcast (paper §4.4 linear scheme).
 
     Chunks leave the root every step and ripple through the chain; every rank
@@ -206,6 +257,7 @@ def stream_bcast(x: jax.Array, comm: Communicator, *, root: int = 0, n_chunks: i
     assert S % n_chunks == 0
     csz = S // n_chunks
     r = comm.rank()
+    tp = _resolve(transport, comm)
     is_line = comm.topology.dims is None  # bus et al: chain both directions
 
     if is_line:
@@ -221,10 +273,10 @@ def stream_bcast(x: jax.Array, comm: Communicator, *, root: int = 0, n_chunks: i
         inj = lax.dynamic_slice_in_dim(x, idx, csz, axis=0)
         at_root_live = jnp.logical_and(r == root, t < n_chunks)
         pipe_u = _mask_sel(at_root_live, inj, pipe_u)
-        pipe_u = lax.ppermute(pipe_u, comm.axis, up_pairs)
+        pipe_u = tp.permute(pipe_u, comm, up_pairs)
         if down_pairs is not None:
             pipe_d = _mask_sel(at_root_live, inj, pipe_d)
-            pipe_d = lax.ppermute(pipe_d, comm.axis, down_pairs)
+            pipe_d = tp.permute(pipe_d, comm, down_pairs)
             arriving = jnp.where(r > root, pipe_u, pipe_d)
         else:
             arriving = pipe_u
@@ -237,12 +289,18 @@ def stream_bcast(x: jax.Array, comm: Communicator, *, root: int = 0, n_chunks: i
     out0 = _pvary(jnp.zeros_like(x), comm)
     pipe0 = _pvary(jnp.zeros((csz,) + x.shape[1:], x.dtype), comm)
     steps = n_chunks + P - 2
-    out, _, _ = lax.fori_loop(0, steps, body, (out0, pipe0, pipe0))
+    out, _, _ = _schedule_loop(tp, steps, body, (out0, pipe0, pipe0))
     return _mask_sel(r == root, x, out)
 
 
 def stream_reduce(
-    x: jax.Array, comm: Communicator, *, root: int = 0, n_chunks: int = 1, op=jnp.add
+    x: jax.Array,
+    comm: Communicator,
+    *,
+    root: int = 0,
+    n_chunks: int = 1,
+    op=jnp.add,
+    transport=None,
 ):
     """Pipelined chain reduction to ``root`` (credit/tile-based, paper §4.4).
 
@@ -257,6 +315,7 @@ def stream_reduce(
     assert S % n_chunks == 0
     csz = S // n_chunks
     r = comm.rank()
+    tp = _resolve(transport, comm)
     dist = (r - root) % P  # ring distance (chain order: farthest = P-1)
     down_pairs = comm.ring_perm(-1)
 
@@ -268,7 +327,7 @@ def stream_reduce(
         # Farthest rank injects chunk t.
         inj_ok = jnp.logical_and(dist == P - 1, t < n_chunks)
         pipe = _mask_sel(inj_ok, chunk_at(jnp.minimum(t, n_chunks - 1)), pipe)
-        pipe = lax.ppermute(pipe, comm.axis, down_pairs)
+        pipe = tp.permute(pipe, comm, down_pairs)
         # After the shift at step t, rank at ring-distance d holds chunk
         # c = t - (P - 2 - d): injected at step c, it has moved t - c + 1 hops.
         c = t - (P - 2 - dist)
@@ -283,23 +342,24 @@ def stream_reduce(
 
     out0 = _pvary(jnp.zeros_like(x), comm)
     pipe0 = _pvary(jnp.zeros((csz,) + x.shape[1:], x.dtype), comm)
-    out, _ = lax.fori_loop(0, n_chunks + P - 2, body, (out0, pipe0))
+    out, _ = _schedule_loop(tp, n_chunks + P - 2, body, (out0, pipe0))
     return _mask_sel(r == root, out, jnp.zeros_like(x))
 
 
-def stream_gather(x: jax.Array, comm: Communicator, *, root: int = 0):
+def stream_gather(x: jax.Array, comm: Communicator, *, root: int = 0, transport=None):
     """Convoy gather: every shard shifts one hop toward the root per step;
     the root receives nearest-first, one shard per step (root-link bandwidth
     optimal, the paper's sequentially-coordinated Gather)."""
     P = comm.size
     r = comm.rank()
+    tp = _resolve(transport, comm)
     out = jnp.zeros((P,) + x.shape, x.dtype)
     out = jax.lax.dynamic_update_index_in_dim(out, x, r, 0)
     if P == 1:
         return out.reshape((P * x.shape[0],) + x.shape[1:])
     pipe = x
     for t in range(P - 1):
-        pipe = _shift(pipe, comm, -1)  # toward root (ring -1 = decreasing dist)
+        pipe = tp.shift(pipe, comm, -1)  # toward root (ring -1 = decreasing dist)
         src = (r + t + 1) % P
         upd = jax.lax.dynamic_update_index_in_dim(out, pipe, src, 0)
         out = _mask_sel(r == root, upd, out)
@@ -307,11 +367,12 @@ def stream_gather(x: jax.Array, comm: Communicator, *, root: int = 0):
     return out.reshape((P * x.shape[0],) + x.shape[1:])
 
 
-def stream_scatter(x: jax.Array, comm: Communicator, *, root: int = 0):
+def stream_scatter(x: jax.Array, comm: Communicator, *, root: int = 0, transport=None):
     """Convoy scatter: the root injects blocks farthest-first; after P-1
     shifts every rank's pipe register holds its own block."""
     P = comm.size
     r = comm.rank()
+    tp = _resolve(transport, comm)
     m = x.shape[0] // P
     xb = x.reshape((P, m) + x.shape[1:])
     if P == 1:
@@ -321,7 +382,7 @@ def stream_scatter(x: jax.Array, comm: Communicator, *, root: int = 0):
         d = P - 1 - t  # inject block for ring-distance d
         blk = jax.lax.dynamic_index_in_dim(xb, (root + d) % P, 0, keepdims=False)
         pipe = _mask_sel(r == root, blk, pipe)
-        pipe = _shift(pipe, comm, +1)
+        pipe = tp.shift(pipe, comm, +1)
     own = jax.lax.dynamic_index_in_dim(xb, r, 0, keepdims=False)
     return _mask_sel(r == root, own, pipe)
 
@@ -338,11 +399,12 @@ def _tree_rounds(P: int):
         k += 1
 
 
-def tree_bcast(x: jax.Array, comm: Communicator, *, root: int = 0):
+def tree_bcast(x: jax.Array, comm: Communicator, *, root: int = 0, transport=None):
     """Binomial-tree broadcast: O(log P) rounds of whole-message sends.
     Better than the chain for small messages / large P (latency-bound)."""
     P = comm.size
     r = comm.rank()
+    tp = _resolve(transport, comm)
     rel = (r - root) % P
     have = (rel == 0)
     buf = _mask_sel(r == root, x, jnp.zeros_like(x))
@@ -350,17 +412,20 @@ def tree_bcast(x: jax.Array, comm: Communicator, *, root: int = 0):
         pairs = [
             ((root + i) % P, (root + i + h) % P) for i in range(h) if i + h < P
         ]
-        moved = lax.ppermute(buf, comm.axis, pairs)
+        moved = tp.permute(buf, comm, pairs)
         recv = jnp.logical_and(rel >= h, rel < 2 * h)
         buf = _mask_sel(recv, moved, buf)
         have = jnp.logical_or(have, recv)
     return buf
 
 
-def tree_reduce(x: jax.Array, comm: Communicator, *, root: int = 0, op=jnp.add):
+def tree_reduce(
+    x: jax.Array, comm: Communicator, *, root: int = 0, op=jnp.add, transport=None
+):
     """Binomial-tree reduction to root: O(log P) rounds."""
     P = comm.size
     r = comm.rank()
+    tp = _resolve(transport, comm)
     rel = (r - root) % P
     buf = x
     rounds = list(_tree_rounds(P))
@@ -368,7 +433,7 @@ def tree_reduce(x: jax.Array, comm: Communicator, *, root: int = 0, op=jnp.add):
         pairs = [
             ((root + i + h) % P, (root + i) % P) for i in range(h) if i + h < P
         ]
-        moved = lax.ppermute(buf, comm.axis, pairs)
+        moved = tp.permute(buf, comm, pairs)
         recv = rel < h
         # ranks in [h, 2h) sent; ranks in [0, h) fold the arrival in.
         sent_exists = jnp.logical_and(recv, rel + h < P)
@@ -381,35 +446,37 @@ def tree_reduce(x: jax.Array, comm: Communicator, *, root: int = 0, op=jnp.add):
 # ---------------------------------------------------------------------------
 
 
-def staged_bcast(x, comm: Communicator, *, root: int = 0):
+def staged_bcast(x, comm: Communicator, *, root: int = 0, transport=None):
     """Unpipelined baseline: root sends the whole message to each rank in
     turn (models the paper's host-staged path: serialized bulk transfers,
     no streaming overlap)."""
     P = comm.size
     r = comm.rank()
+    tp = _resolve(transport, comm)
     out = _mask_sel(r == root, x, jnp.zeros_like(x))
     for d in range(1, P):
         dst = (root + d) % P
         path = comm.route_table.path(root, dst)
         buf = _mask_sel(r == root, x, jnp.zeros_like(x))
         for a, b in zip(path[:-1], path[1:]):
-            buf = lax.ppermute(buf, comm.axis, [(a, b)])
+            buf = tp.permute(buf, comm, [(a, b)])
         out = _mask_sel(r == dst, buf, out)
     return out
 
 
-def staged_reduce(x, comm: Communicator, *, root: int = 0, op=jnp.add):
+def staged_reduce(x, comm: Communicator, *, root: int = 0, op=jnp.add, transport=None):
     """Unpipelined baseline reduce: each rank's full buffer travels to the
     root sequentially."""
     P = comm.size
     r = comm.rank()
+    tp = _resolve(transport, comm)
     acc = _mask_sel(r == root, x, jnp.zeros_like(x))
     for d in range(1, P):
         src = (root + d) % P
         path = comm.route_table.path(src, root)
         buf = _mask_sel(r == src, x, jnp.zeros_like(x))
         for a, b in zip(path[:-1], path[1:]):
-            buf = lax.ppermute(buf, comm.axis, [(a, b)])
+            buf = tp.permute(buf, comm, [(a, b)])
         acc = _mask_sel(r == root, op(acc, buf), acc)
     return acc
 

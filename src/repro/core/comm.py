@@ -27,13 +27,19 @@ from .topology import Topology
 
 @dataclass(frozen=True)
 class Communicator:
-    """SMI_Comm: a set of ranks over mesh axes with a routed topology."""
+    """SMI_Comm: a set of ranks over mesh axes with a routed topology.
+
+    ``transport`` names the message-moving backend (see
+    :mod:`repro.transport`) every collective over this communicator uses by
+    default; a per-call ``transport=`` keyword overrides it.
+    """
 
     axis_names: tuple[str, ...]
     axis_sizes: tuple[int, ...]
     topology: Topology
     route_table: RouteTable
     name: str = "world"
+    transport: str = "static"
 
     # -- construction ------------------------------------------------------
 
@@ -44,6 +50,7 @@ class Communicator:
         topology: Topology | None = None,
         routing_scheme: str = "auto",
         name: str = "world",
+        transport: str = "static",
     ) -> "Communicator":
         if isinstance(axis_names, str):
             axis_names = (axis_names,)
@@ -58,13 +65,19 @@ class Communicator:
             f"topology has {topology.n_ranks} ranks but axes {axis_names} give {n}"
         )
         rt = compute_route_table(topology, scheme=routing_scheme)
-        return Communicator(axis_names, axis_sizes, topology, rt, name=name)
+        return Communicator(
+            axis_names, axis_sizes, topology, rt, name=name, transport=transport
+        )
 
     def with_topology(self, topology: Topology, routing_scheme: str = "auto") -> "Communicator":
         """Re-route over a new logical topology *without* changing the program
         structure — the paper's 'recompute routes, keep the bitstream'."""
         rt = compute_route_table(topology, scheme=routing_scheme)
         return replace(self, topology=topology, route_table=rt)
+
+    def with_transport(self, transport: str) -> "Communicator":
+        """Same ranks/routes, different message-moving backend."""
+        return replace(self, transport=transport)
 
     # -- rank queries (trace-time inside shard_map) --------------------------
 

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .comm import Communicator
-from .collectives import _shift, stream_reduce_scatter
+from .collectives import _resolve, stream_reduce_scatter
 
 
 def _default_mm(a, b):
@@ -46,6 +46,7 @@ def stream_allgather_matmul(
     matmul: Callable | None = None,
     bidir: bool = False,
     return_gathered: bool = False,
+    transport=None,
 ):
     """``concat_p(x) @ w`` with the all-gather streamed through the GEMM.
 
@@ -65,6 +66,7 @@ def stream_allgather_matmul(
     mm = matmul or _default_mm
     P = comm.size
     r = comm.rank()
+    t = _resolve(transport, comm)
     m = x.shape[0]
     out = jnp.zeros((P, m, w.shape[1]), x.dtype)
     out = lax.dynamic_update_index_in_dim(out, mm(x, w), r, 0)
@@ -78,7 +80,7 @@ def stream_allgather_matmul(
     if not bidir:
         buf = x
         for s in range(1, P):
-            buf = _shift(buf, comm, +1)  # originated at rank r - s
+            buf = t.shift(buf, comm, +1)  # originated at rank r - s
             out = lax.dynamic_update_index_in_dim(out, mm(buf, w), (r - s) % P, 0)
             if return_gathered:
                 gat = lax.dynamic_update_index_in_dim(gat, buf, (r - s) % P, 0)
@@ -88,12 +90,12 @@ def stream_allgather_matmul(
         n_up = P // 2
         n_down = (P - 1) // 2
         for s in range(1, n_up + 1):
-            up = _shift(up, comm, +1)
+            up = t.shift(up, comm, +1)
             out = lax.dynamic_update_index_in_dim(out, mm(up, w), (r - s) % P, 0)
             if return_gathered:
                 gat = lax.dynamic_update_index_in_dim(gat, up, (r - s) % P, 0)
             if s <= n_down:
-                down = _shift(down, comm, -1)
+                down = t.shift(down, comm, -1)
                 out = lax.dynamic_update_index_in_dim(out, mm(down, w), (r + s) % P, 0)
                 if return_gathered:
                     gat = lax.dynamic_update_index_in_dim(gat, down, (r + s) % P, 0)
@@ -109,6 +111,7 @@ def stream_matmul_reducescatter(
     comm: Communicator,
     *,
     matmul: Callable | None = None,
+    transport=None,
 ):
     """``reduce_scatter(x @ w)`` with per-block partial GEMMs just-in-time.
 
@@ -124,7 +127,7 @@ def stream_matmul_reducescatter(
         rows = lax.dynamic_slice_in_dim(x, i * m, m, axis=0)
         return mm(rows, w)
 
-    return stream_reduce_scatter(None, comm, compute_chunk=compute_chunk)
+    return stream_reduce_scatter(None, comm, compute_chunk=compute_chunk, transport=transport)
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +144,7 @@ def stream_ring_attention(
     causal: bool = True,
     sm_scale: float | None = None,
     local_window: int | None = None,
+    transport=None,
 ):
     """Ring attention: K/V blocks stream around the ring during flash-style
     online-softmax accumulation (SMI streaming applied to attention).
@@ -155,6 +159,7 @@ def stream_ring_attention(
     """
     P = comm.size
     r = comm.rank()
+    t = _resolve(transport, comm)
     B, Sq, H, D = q.shape
     Hkv = k.shape[2]
     g = H // Hkv
@@ -211,7 +216,7 @@ def stream_ring_attention(
     carry = block_update((m_i, l_i, acc), (k, v), r)
     kv = (k, v)
     for s_ in range(1, P):
-        kv = _shift(kv, comm, +1)
+        kv = t.shift(kv, comm, +1)
         owner = (r - s_) % P
         carry = block_update(carry, kv, owner)
     m_i, l_i, acc = carry
@@ -231,6 +236,7 @@ def halo_exchange_2d(
     *,
     grid: tuple[int, int],
     halo: tuple[int, int] = (1, 1),
+    transport=None,
 ):
     """Exchange N/S/E/W halo slabs of a 2D-decomposed domain (paper Fig. 14).
 
@@ -244,6 +250,7 @@ def halo_exchange_2d(
     r = comm.rank()
     rx, ry = r // RY, r % RY
     n = comm.size
+    t = _resolve(transport, comm)
     assert n == RX * RY
 
     def perm(drx, dry):
@@ -256,8 +263,7 @@ def halo_exchange_2d(
         return pairs
 
     def shift(buf, drx, dry):
-        pairs = perm(drx, dry)
-        return lax.ppermute(buf, comm.axis, pairs)
+        return t.permute(buf, comm, perm(drx, dry))
 
     # south halo travels north->south etc.  Send my boundary slabs.
     north = shift(x[:hx], -1, 0)       # my top rows -> north neighbour's south? no:

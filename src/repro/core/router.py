@@ -82,13 +82,19 @@ def make_links(dims: tuple[int, ...]):
     return links
 
 
-def make_router_tables(topology: Topology, dims: tuple[int, ...]) -> np.ndarray:
+def make_router_tables(
+    topology: Topology, dims: tuple[int, ...], rt=None
+) -> np.ndarray:
     """The route generator for the dynamic router: (n, n) int32 of link ids.
 
     Every edge of ``topology`` must be a physical neighbour pair on the
     ``dims`` torus (the paper's constraint: logical connections are real
-    wires).  Entry [r, d] = physical link id of the first hop r -> d."""
-    rt = compute_route_table(topology)
+    wires).  Entry [r, d] = physical link id of the first hop r -> d.
+    Pass ``rt`` (a precomputed RouteTable, e.g. a communicator's) to make
+    the router follow exactly those paths instead of recomputing with the
+    default scheme."""
+    if rt is None:
+        rt = compute_route_table(topology)
     phys = physical_link_map(dims)
     # remap ids for size-2 dims where only the +1 link exists
     links = make_links(dims)

@@ -27,12 +27,14 @@ communicator's mesh axes.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import make_mesh as _compat_make_mesh
+from ..compat import pvary_missing
+from ..compat import shard_map as _compat_shard_map
 from .comm import Communicator
 
 
@@ -46,15 +48,10 @@ def _pvary(x, comm: "Communicator"):
 
     shard_map's varying-manual-axes type system requires loop carries that
     flow through ppermute to be 'varying'; zeros created inside the region
-    start out 'invariant'.  (jax >= 0.8 VMA typing.)"""
+    start out 'invariant'.  (jax >= 0.8 VMA typing; identity on pre-VMA
+    runtimes via the compat layer.)"""
     names = tuple(comm.axis_names)
-
-    def cast(v):
-        vma = getattr(jax.typeof(v), "vma", frozenset())
-        missing = tuple(n for n in names if n not in vma)
-        return lax.pcast(v, missing, to="varying") if missing else v
-
-    return jax.tree.map(cast, x)
+    return jax.tree.map(lambda v: pvary_missing(v, names), x)
 
 
 pvary = _pvary  # public: mark user loop-carry state varying over comm axes
@@ -72,48 +69,22 @@ def stream_p2p(
     dst: int,
     comm: Communicator,
     n_chunks: int = 1,
+    transport=None,
 ) -> jax.Array:
     """Stream ``x`` (resident on ``src``) to ``dst`` along the routed path.
 
     Every rank passes a same-shaped ``x`` (SPMD); only the source's content
     is transmitted.  Returns a buffer that equals ``x``@src on ``dst`` and is
-    zeros elsewhere.  The message is split along axis 0 into ``n_chunks``
-    chunks that move through the multi-hop pipe one hop per step, all hops
-    advancing in parallel — one ``ppermute`` per step carrying every in-flight
-    chunk (the asynchronicity degree k of §3.3 equals the path length).
+    zeros elsewhere.  Dispatches to the selected transport backend: the
+    static/fused backends run the chunk-pipelined multi-hop ppermute
+    schedule (``n_chunks`` chunks in flight, the asynchronicity degree k of
+    §3.3); the packet backend stages the message into the dynamic router.
     """
-    if src == dst:
-        return x
-    path = comm.route_table.path(src, dst)
-    hops = len(path) - 1
-    pairs = comm.path_perm(path)
+    from ..transport.registry import resolve_transport
 
-    S = x.shape[0]
-    assert S % n_chunks == 0, f"leading dim {S} not divisible by n_chunks={n_chunks}"
-    csz = S // n_chunks
-    r = comm.rank()
-    steps = n_chunks + hops - 1
-
-    def body(t, carry):
-        y, pipe = carry
-        # Source loads chunk t (clamped; masked to src and t < n_chunks).
-        load_idx = jnp.minimum(t, n_chunks - 1) * csz
-        inj = lax.dynamic_slice_in_dim(x, load_idx, csz, axis=0)
-        use_inj = jnp.logical_and(r == path[0], t < n_chunks)
-        pipe = _mask_sel(use_inj, inj, pipe)
-        # One pipeline shift: every hop advances.
-        pipe = lax.ppermute(pipe, comm.axis, pairs)
-        # Destination stores chunk (t - hops + 1) when it arrives.
-        c_out = t - (hops - 1)
-        store = jnp.logical_and(r == path[-1], c_out >= 0)
-        upd = lax.dynamic_update_slice_in_dim(y, pipe, jnp.maximum(c_out, 0) * csz, axis=0)
-        y = _mask_sel(store, upd, y)
-        return y, pipe
-
-    y0 = _pvary(jnp.zeros_like(x), comm)
-    pipe0 = _pvary(jnp.zeros((csz,) + x.shape[1:], x.dtype), comm)
-    y, _ = lax.fori_loop(0, steps, body, (y0, pipe0))
-    return y
+    return resolve_transport(transport, comm).p2p(
+        x, src=src, dst=dst, comm=comm, n_chunks=n_chunks
+    )
 
 
 def stream_exchange(
@@ -121,11 +92,14 @@ def stream_exchange(
     *,
     pairs: list[tuple[int, int]],
     comm: Communicator,
+    transport=None,
 ) -> jax.Array:
     """Single-hop bulk exchange over explicit (src, dst) pairs — the
     "fixed wiring" streaming model of paper Fig. 3, for benchmarks and halo
     exchanges between mesh neighbours (one physical link per pair)."""
-    return lax.ppermute(x, comm.axis, pairs)
+    from ..transport.registry import resolve_transport
+
+    return resolve_transport(transport, comm).permute(x, comm, pairs)
 
 
 # ---------------------------------------------------------------------------
@@ -265,12 +239,10 @@ def channel_transfer(chan: Channel, x: jax.Array, n_chunks: int = 1) -> jax.Arra
 def run_spmd(fn, mesh, in_specs, out_specs, *args):
     """jit(shard_map(fn)) one-liner used across tests and benchmarks."""
     return jax.jit(
-        jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        _compat_shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     )(*args)
 
 
 def make_test_mesh(shape, names):
     """Host-device mesh with Auto axis types (tests / benchmarks)."""
-    from jax.sharding import AxisType
-
-    return jax.make_mesh(tuple(shape), tuple(names), axis_types=(AxisType.Auto,) * len(shape))
+    return _compat_make_mesh(shape, names)

@@ -36,10 +36,8 @@ def cdiv(a: int, b: int) -> int:
 
 def match_vma(x, ref):
     """Promote ``x``'s varying-manual-axes to match ``ref`` (no-op outside
-    shard_map).  Needed for scan carries created inside shard_map bodies."""
-    vma = getattr(jax.typeof(ref), "vma", frozenset())
-    have = getattr(jax.typeof(x), "vma", frozenset())
-    missing = tuple(a for a in vma if a not in have)
-    if missing:
-        return jax.lax.pcast(x, missing, to="varying")
-    return x
+    shard_map and on pre-VMA runtimes).  Needed for scan carries created
+    inside shard_map bodies."""
+    from ..compat import pvary_missing, vma_of
+
+    return pvary_missing(x, tuple(vma_of(ref)))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...compat import tpu_compiler_params
+
 
 def _ssd_kernel(
     x_ref,      # (1, L, Dh)
@@ -103,7 +105,7 @@ def ssd_pallas(
         out_specs=pl.BlockSpec((1, chunk, Dh), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, Dh), x.dtype),
         scratch_shapes=[pltpu.VMEM((Dst, Dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -24,7 +24,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from ..configs import ARCHS, SHAPES, cells, get_arch
+from ..configs import COMM_MODES, ARCHS, SHAPES, cells, get_arch
 from ..data.inputs import input_specs
 from .mesh import make_production_mesh
 from .steps import TrainSettings, build_prefill, build_serve, build_train
@@ -152,7 +152,7 @@ def main(argv=None):
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
-    ap.add_argument("--comm-mode", default="smi", choices=["smi", "bulk"])
+    ap.add_argument("--comm-mode", default="smi", choices=list(COMM_MODES))
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)

@@ -9,21 +9,18 @@ torus dimension with its own link bandwidth.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from ..compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/benchmarks/elastic restarts."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(shape)
-    )
+    return _compat_make_mesh(shape, axes)
 
 
 def batch_axes_of(mesh) -> tuple[str, ...]:

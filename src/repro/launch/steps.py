@@ -40,6 +40,8 @@ from .mesh import batch_axes_of
 
 @dataclass
 class TrainSettings:
+    #: "smi" | "smi:static" | "smi:packet" | "smi:fused" | "bulk" — base
+    #: collective mode plus transport backend (repro/transport registry)
     comm_mode: str = "smi"
     remat: str = "nothing"
     loss_chunks: int = 8

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import Checkpointer
-from ..configs import SHAPES, get_arch, smoke
+from ..configs import COMM_MODES, SHAPES, get_arch, smoke
 from ..configs.base import ShapeConfig
 from ..data.pipeline import SyntheticTokenPipeline
 from ..ft import StepWatchdog
@@ -90,7 +90,9 @@ def main(argv=None):
     ap.add_argument("--mesh", default="2,4", help="data,model grid")
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--comm-mode", default="smi", choices=["smi", "bulk"])
+    ap.add_argument("--comm-mode", default="smi", choices=list(COMM_MODES),
+                    help="collective mode; smi:<backend> picks the "
+                         "transport (see repro/transport)")
     ap.add_argument("--remat", default="nothing")
     ap.add_argument("--compressed-grads", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)

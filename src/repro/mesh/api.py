@@ -2,8 +2,12 @@
 
 Models are written once against these helpers; the context selects
 
-* ``comm_mode="smi"``  — the paper's streaming collectives (ring ppermute
-  schedules overlapped with per-chunk GEMMs, core/overlap.py),
+* ``comm_mode="smi"``  — the paper's streaming collectives (ring schedules
+  overlapped with per-chunk GEMMs, core/overlap.py).  An optional suffix
+  picks the transport backend moving the bytes (see repro/transport):
+  ``"smi:static"`` (trace-time ppermute schedules, the default),
+  ``"smi:packet"`` (the dynamic packet-switched router end to end),
+  ``"smi:fused"`` (Pallas-fused shift+accumulate on TPU),
 * ``comm_mode="bulk"`` — XLA bulk collectives (lax.all_gather / psum_scatter)
   — the "host-orchestrated bulk transfer" baseline of the paper's
   comparisons, and the fallback fast path,
@@ -32,6 +36,7 @@ from ..core.overlap import (
     stream_matmul_reducescatter,
     stream_ring_attention,
 )
+from ..transport import resolve_comm_mode
 
 
 @dataclass(frozen=True)
@@ -41,11 +46,16 @@ class ParallelCtx:
     model_axis: str | None = None          # TP/SP/EP axis name
     batch_axes: tuple[str, ...] = ()       # DP axes ("pod", "data")
     model_comm: Communicator | None = None
-    comm_mode: str = "none"                # smi | bulk | none
+    comm_mode: str = "none"                # smi | bulk | none (base mode)
+    transport: str = "static"              # smi backend: static|packet|fused
     matmul_fn: Callable | None = None      # Pallas kernel injection
     mesh: object | None = None
     opt_shared_gather: bool = False        # beyond-paper: one seq ring/block
     opt_ring_attn: bool = False            # beyond-paper: KV-streaming attn
+
+    @property
+    def is_smi(self) -> bool:
+        return self.comm_mode == "smi"
 
     @property
     def tp(self) -> int:
@@ -65,17 +75,22 @@ def make_ctx(
     opt_shared_gather: bool = False,
     opt_ring_attn: bool = False,
 ) -> ParallelCtx:
+    base_mode, transport = resolve_comm_mode(comm_mode)
     if mesh is None or model_axis is None:
-        return ParallelCtx(comm_mode="none", mesh=mesh,
+        return ParallelCtx(comm_mode="none", transport=transport, mesh=mesh,
                            opt_shared_gather=opt_shared_gather,
                            opt_ring_attn=opt_ring_attn)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    comm = Communicator.create(model_axis, (sizes[model_axis],), name=f"tp_{model_axis}")
+    comm = Communicator.create(
+        model_axis, (sizes[model_axis],), name=f"tp_{model_axis}",
+        transport=transport,
+    )
     return ParallelCtx(
         model_axis=model_axis,
         batch_axes=tuple(a for a in batch_axes if a in sizes),
         model_comm=comm,
-        comm_mode=comm_mode,
+        comm_mode=base_mode,
+        transport=transport,
         matmul_fn=matmul_fn,
         mesh=mesh,
         opt_shared_gather=opt_shared_gather,
@@ -108,7 +123,7 @@ def allreduce_model(x, ctx: ParallelCtx):
     """Full all-reduce over the model axis (MoE combine, bulk decode)."""
     if ctx.tp == 1:
         return x
-    if ctx.comm_mode == "smi":
+    if ctx.is_smi:
         return stream_allreduce(x, ctx.model_comm)
     return lax.psum(x, ctx.model_axis)
 
@@ -121,7 +136,7 @@ def colparallel_matmul(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
     w: (K, N_local).  Returns (t_local * tp, N_local): full rows, local cols."""
     if ctx.tp == 1:
         return _mm(ctx)(x2d, w)
-    if ctx.comm_mode == "smi":
+    if ctx.is_smi:
         return stream_allgather_matmul(x2d, w, ctx.model_comm, matmul=_mm(ctx))
     xf = lax.all_gather(x2d, ctx.model_axis, axis=0, tiled=True)
     return _mm(ctx)(xf, w)
@@ -134,7 +149,7 @@ def colparallel_matmul_gathered(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
     of the same input become ring-free local GEMMs."""
     if ctx.tp == 1:
         return _mm(ctx)(x2d, w), x2d
-    if ctx.comm_mode == "smi":
+    if ctx.is_smi:
         return stream_allgather_matmul(
             x2d, w, ctx.model_comm, matmul=_mm(ctx), return_gathered=True
         )
@@ -147,7 +162,7 @@ def rowparallel_matmul(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
     contraction; w: (K_local, N).  Returns (t_full / tp, N): seq-sharded."""
     if ctx.tp == 1:
         return _mm(ctx)(x2d, w)
-    if ctx.comm_mode == "smi":
+    if ctx.is_smi:
         return stream_matmul_reducescatter(x2d, w, ctx.model_comm, matmul=_mm(ctx))
     y = _mm(ctx)(x2d, w)
     return lax.psum_scatter(y, ctx.model_axis, scatter_dimension=0, tiled=True)
@@ -157,7 +172,7 @@ def allgather_seq(x, ctx: ParallelCtx, axis: int = 0):
     """Plain sequence all-gather (for non-GEMM consumers, e.g. conv)."""
     if ctx.tp == 1:
         return x
-    if ctx.comm_mode == "smi":
+    if ctx.is_smi:
         from ..core.collectives import stream_allgather
 
         if axis != 0:
@@ -172,7 +187,7 @@ def allgather_seq(x, ctx: ParallelCtx, axis: int = 0):
 def reduce_scatter_seq(x, ctx: ParallelCtx, axis: int = 0):
     if ctx.tp == 1:
         return x
-    if ctx.comm_mode == "smi":
+    if ctx.is_smi:
         from ..core.collectives import stream_reduce_scatter
 
         if axis != 0:
@@ -186,7 +201,7 @@ def reduce_scatter_seq(x, ctx: ParallelCtx, axis: int = 0):
 
 def ring_attention(q, k, v, ctx: ParallelCtx, **kw):
     """Sequence-parallel attention (prefill hillclimb path)."""
-    assert ctx.tp > 1 and ctx.comm_mode == "smi"
+    assert ctx.tp > 1 and ctx.is_smi
     return stream_ring_attention(q, k, v, ctx.model_comm, **kw)
 
 
@@ -207,12 +222,8 @@ def grad_sync(grads, ctx: ParallelCtx, *, compressed: bool = False):
         sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
         for a in ctx.batch_axes:
             n *= sizes[a]
-    if ctx.comm_mode == "smi":
-        comm = Communicator.create(
-            ctx.batch_axes,
-            tuple(dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))[a] for a in ctx.batch_axes),
-            name="dp",
-        )
+    if ctx.is_smi:
+        comm = _dp_comm(ctx)
         if compressed:
             from ..core.collectives import make_int8_codec
 
@@ -289,7 +300,7 @@ def fsdp_gather(params, fsdp_plan, ctx: ParallelCtx):
     def one(p, dim):
         if dim < 0:
             return p
-        if ctx.comm_mode == "smi":
+        if ctx.is_smi:
             from ..core.collectives import stream_allgather
 
             comm = _dp_comm(ctx)
@@ -304,7 +315,8 @@ def fsdp_gather(params, fsdp_plan, ctx: ParallelCtx):
 def _dp_comm(ctx: ParallelCtx) -> Communicator:
     sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
     return Communicator.create(
-        ctx.batch_axes, tuple(sizes[a] for a in ctx.batch_axes), name="dp"
+        ctx.batch_axes, tuple(sizes[a] for a in ctx.batch_axes), name="dp",
+        transport=ctx.transport,
     )
 
 
@@ -317,7 +329,7 @@ def grad_sync_fsdp(grads, fsdp_plan, ctx: ParallelCtx, *, compressed=False):
     dp = 1
     for a in ctx.batch_axes:
         dp *= sizes[a]
-    comm = _dp_comm(ctx) if ctx.comm_mode == "smi" else None
+    comm = _dp_comm(ctx) if ctx.is_smi else None
     q = dq = None
     if compressed:
         from ..core.collectives import make_int8_codec
@@ -327,7 +339,7 @@ def grad_sync_fsdp(grads, fsdp_plan, ctx: ParallelCtx, *, compressed=False):
     def one(g, dim):
         if dim >= 0:
             return g / dp
-        if ctx.comm_mode == "smi":
+        if ctx.is_smi:
             from ..core.collectives import stream_allreduce
 
             return stream_allreduce(g, comm, quantize=q, dequantize=dq) / dp

@@ -2,7 +2,9 @@
 
 Sequence-parallel residual stream end-to-end:
   * vocab-parallel embedding with the psum fused into a reduce-scatter onto
-    sequence shards (Megatron-SP style, SMI or bulk collectives),
+    sequence shards (Megatron-SP style; SMI or bulk collectives, with the
+    SMI wire path selected by the ctx transport backend — comm_mode
+    "smi:static" | "smi:packet" | "smi:fused", see repro/transport),
   * vocab-parallel cross-entropy, chunked over the sequence so (B, S, V/tp)
     logits never materialise at once,
   * modality frontends per the assignment: VLM patch embeddings and

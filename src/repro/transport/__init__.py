@@ -1,0 +1,47 @@
+"""Pluggable transport backends (DESIGN.md §3).
+
+The paper's central flexibility claim is that *routing is data, not
+program*: the compiled design (bitstream / XLA executable) is fixed, and
+what moves messages — static schedules, a packet-switched router, a fused
+hot path — is a swappable layer underneath one interface.  This package is
+that layer:
+
+* :class:`~repro.transport.base.Transport` — the protocol every backend
+  implements: ring ``shift``, explicit-pairs ``permute``, the fused
+  ``shift_accumulate`` hot-path hook, routed ``p2p``, and per-step
+  cost/overflow counters.
+* :func:`~repro.transport.registry.get_transport` /
+  :func:`~repro.transport.registry.register_transport` — the string-keyed
+  registry.  Built-ins: ``"static"`` (trace-time routed ppermute
+  schedules), ``"packet"`` (the dynamic store-and-forward router run end
+  to end), ``"fused"`` (static schedules with a Pallas shift+accumulate
+  step on TPU).
+* :func:`~repro.transport.registry.resolve_comm_mode` — parses the
+  ``comm_mode`` strings used across launch/configs/benchmarks
+  (``"smi:packet"`` → SMI collectives over the packet backend).
+
+Every collective in :mod:`repro.core.collectives` and every overlap engine
+in :mod:`repro.core.overlap` dispatches through a Transport, so one call
+site runs unchanged over all backends — selected per
+:class:`~repro.core.comm.Communicator` (its ``transport=`` field) or per
+call (the ``transport=`` keyword).
+"""
+
+from .base import Transport, TransportStats
+from .registry import (
+    available_transports,
+    get_transport,
+    register_transport,
+    resolve_comm_mode,
+    resolve_transport,
+)
+
+__all__ = [
+    "Transport",
+    "TransportStats",
+    "available_transports",
+    "get_transport",
+    "register_transport",
+    "resolve_comm_mode",
+    "resolve_transport",
+]

@@ -1,0 +1,110 @@
+"""The Transport protocol: what a message-moving backend must provide.
+
+A backend turns *logical* communication steps — a ring shift, an explicit
+permutation, a routed point-to-point transfer — into wire traffic.  The
+collectives and the overlap engine are written once against this interface;
+the backend decides whether a step is a trace-time ppermute (static), a run
+of the packet-switched router (packet), or a ppermute fused with its
+consumer accumulate (fused).
+
+All methods must be callable inside ``jax.shard_map`` over the
+communicator's axes, and all are *schedule-preserving*: for a fixed
+communicator and arguments every backend moves exactly the same values to
+the same ranks, so collective results are bit-identical across backends
+(tests/test_transport.py proves it).
+
+Cost accounting: backends tally trace-time step/byte counters per instance
+(:class:`TransportStats`); the packet backend additionally accumulates the
+router's runtime overflow counter so lossless runs are assertable.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+
+import jax
+
+
+@dataclass
+class TransportStats:
+    """Per-instance accounting, reset with :meth:`Transport.reset_stats`.
+
+    ``steps``/``bytes_moved`` are trace-time counts (schedule cost per rank:
+    one "step" = one link-schedule tick; bytes = payload carried per rank
+    per tick, summed).  ``overflow`` is a traced runtime counter summed over
+    router runs (``None`` for backends that cannot drop traffic).
+    """
+
+    steps: int = 0
+    bytes_moved: int = 0
+    overflow: object | None = None  # jax scalar i32 once a router has run
+
+    def add_overflow(self, ovf):
+        self.overflow = ovf if self.overflow is None else self.overflow + ovf
+
+
+def tree_bytes(x) -> int:
+    """Static wire-byte count of a pytree (per rank, one step)."""
+    total = 0
+    for leaf in jax.tree.leaves(x):
+        size = 1
+        for d in leaf.shape:
+            size *= int(d)
+        total += size * leaf.dtype.itemsize
+    return total
+
+
+@dataclass
+class Transport(abc.ABC):
+    """One message-moving backend.  Instances are cheap, stateful only in
+    their counters; create one per logical phase when separate accounting
+    is wanted."""
+
+    stats: TransportStats = field(default_factory=TransportStats)
+
+    # registry key; a plain class attribute (NOT a dataclass field) so
+    # @register_transport's assignment reaches every instance
+    name = ""
+
+    #: True when step methods thread *traced* values into ``stats`` (the
+    #: packet backend's overflow counter).  Such a backend must not be
+    #: driven from inside ``lax.fori_loop``/``scan`` bodies — the schedule
+    #: loops in core/collectives.py unroll instead — and one instance must
+    #: not be reused across separately-traced functions.
+    runtime_stats: bool = False
+
+    # ------------------------------------------------------------- steps
+
+    @abc.abstractmethod
+    def permute(self, x, comm, pairs):
+        """Move pytree ``x`` along explicit (src, dst) rank pairs — one link
+        step of the schedule.  Ranks absent as a destination receive the
+        backend's bubble value (zeros / stale register, matching ppermute
+        semantics)."""
+
+    def shift(self, x, comm, step: int = 1):
+        """Ring shift of ``x`` by ``step`` along the linearised ranks."""
+        return self.permute(x, comm, comm.ring_perm(step))
+
+    def shift_accumulate(self, x, addend, comm, step: int = 1):
+        """Hot-path hook for the ring-reduce inner loop:
+        ``shift(x) + addend`` — backends may fuse the add into the
+        receive (the fused backend's Pallas kernel).  Must equal the
+        unfused composition bit-for-bit in f32."""
+        return jax.tree.map(lambda a, b: a + b,
+                            self.shift(x, comm, step), addend)
+
+    @abc.abstractmethod
+    def p2p(self, x, *, src, dst, comm, n_chunks: int = 1):
+        """Routed whole-message transfer: ``x``@src delivered to ``dst``
+        along the communicator's route table; zeros elsewhere (SPMD)."""
+
+    # ---------------------------------------------------------- counters
+
+    def account(self, x, steps: int = 1):
+        self.stats.steps += steps
+        self.stats.bytes_moved += tree_bytes(x) * steps
+
+    def reset_stats(self):
+        self.stats = TransportStats()

@@ -1,0 +1,89 @@
+"""String-keyed transport registry + comm_mode parsing.
+
+The registry is the runtime-reconfigurability seam: call sites name their
+backend with a string (``"static"``, ``"packet"``, ``"fused"``), carried in
+``Communicator.transport`` or a ``comm_mode`` like ``"smi:packet"``, and the
+same compiled collective call site runs over whichever backend the string
+selects — the TPU rendering of the paper's "upload new routing tables, keep
+the bitstream".
+"""
+
+from __future__ import annotations
+
+from typing import Union
+
+_REGISTRY: dict[str, type] = {}
+
+#: transport key used when a comm_mode / Communicator doesn't name one
+DEFAULT_TRANSPORT = "static"
+
+
+def register_transport(name: str):
+    """Class decorator: register a Transport subclass under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_builtins():
+    if "static" not in _REGISTRY:
+        from . import fused, packet, static  # noqa: F401  (registration)
+
+
+def available_transports() -> tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_transport(name: str | None = None, **kw):
+    """New Transport instance for ``name`` (None -> DEFAULT_TRANSPORT)."""
+    _ensure_builtins()
+    key = name or DEFAULT_TRANSPORT
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown transport {key!r}; available: {available_transports()}"
+        )
+    return _REGISTRY[key](**kw)
+
+
+def resolve_transport(transport, comm=None):
+    """Per-call resolution: explicit object > explicit key > communicator's
+    key > default.  Accepts a Transport instance, a string key, or None."""
+    from .base import Transport
+
+    if isinstance(transport, Transport):
+        return transport
+    if transport is None and comm is not None:
+        transport = getattr(comm, "transport", None)
+    return get_transport(transport)
+
+
+def resolve_comm_mode(mode: Union[str, None]) -> tuple[str, str]:
+    """Split a comm_mode string into (base_mode, transport_key).
+
+    ``"smi"`` -> ("smi", "static"); ``"smi:packet"`` -> ("smi", "packet");
+    ``"bulk"`` / ``"none"`` pass through with the default transport key
+    (unused there).  Unknown bases or transports raise.
+    """
+    if not mode:
+        return "none", DEFAULT_TRANSPORT
+    base, _, backend = mode.partition(":")
+    if base not in ("smi", "bulk", "none"):
+        raise ValueError(f"unknown comm_mode base {base!r} in {mode!r}")
+    if not backend:
+        return base, DEFAULT_TRANSPORT
+    if base != "smi":
+        raise ValueError(
+            f"comm_mode {mode!r}: only 'smi' takes a transport backend"
+        )
+    _ensure_builtins()
+    if backend not in _REGISTRY:
+        raise ValueError(
+            f"comm_mode {mode!r}: unknown transport {backend!r}; "
+            f"available: {available_transports()}"
+        )
+    return base, backend

@@ -1,0 +1,82 @@
+"""Static transport: trace-time routed ppermute schedules (DESIGN.md §3.1).
+
+The fast path.  Every logical step lowers to exactly one ``lax.ppermute``
+on the communicator's axes, so XLA sees a fixed link schedule it can
+software-pipeline; routing decisions were already burnt into the schedule
+at trace time from the communicator's route table.  This is the code that
+used to live inline in ``core/streaming.py`` — moved here so the packet
+and fused backends can slot in under the same call sites.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .base import Transport
+from .registry import register_transport
+
+
+@register_transport("static")
+@dataclass
+class StaticTransport(Transport):
+    """One ppermute per step; the collectives' trace-time default."""
+
+    def permute(self, x, comm, pairs):
+        self.account(x)
+        return jax.tree.map(lambda v: lax.ppermute(v, comm.axis, pairs), x)
+
+    def p2p(self, x, *, src, dst, comm, n_chunks: int = 1):
+        """Chunk-pipelined multi-hop transfer (paper §3.1 / Fig. 9).
+
+        The message splits along axis 0 into ``n_chunks`` chunks that move
+        through the routed pipe one hop per step, all hops advancing in
+        parallel — one ppermute per step carrying every in-flight chunk
+        (asynchronicity degree k of §3.3 = path length)."""
+        from ..core.streaming import _mask_sel, _pvary
+
+        if src == dst:
+            return x
+        path = comm.route_table.path(src, dst)
+        hops = len(path) - 1
+        pairs = comm.path_perm(path)
+
+        S = x.shape[0]
+        assert S % n_chunks == 0, (
+            f"leading dim {S} not divisible by n_chunks={n_chunks}"
+        )
+        csz = S // n_chunks
+        r = comm.rank()
+        steps = n_chunks + hops - 1
+
+        def body(t, carry):
+            y, pipe = carry
+            # Source loads chunk t (clamped; masked to src and t < n_chunks).
+            load_idx = jnp.minimum(t, n_chunks - 1) * csz
+            inj = lax.dynamic_slice_in_dim(x, load_idx, csz, axis=0)
+            use_inj = jnp.logical_and(r == path[0], t < n_chunks)
+            pipe = _mask_sel(use_inj, inj, pipe)
+            # One pipeline shift: every hop advances.
+            pipe = jax.tree.map(
+                lambda v: lax.ppermute(v, comm.axis, pairs), pipe
+            )
+            # Destination stores chunk (t - hops + 1) when it arrives.
+            c_out = t - (hops - 1)
+            store = jnp.logical_and(r == path[-1], c_out >= 0)
+            upd = lax.dynamic_update_slice_in_dim(
+                y, pipe, jnp.maximum(c_out, 0) * csz, axis=0
+            )
+            y = _mask_sel(store, upd, y)
+            return y, pipe
+
+        y0 = _pvary(jnp.zeros_like(x), comm)
+        pipe0 = _pvary(jnp.zeros((csz,) + x.shape[1:], x.dtype), comm)
+        self.account(
+            jax.eval_shape(lambda: jnp.zeros((csz,) + x.shape[1:], x.dtype)),
+            steps=steps,
+        )
+        y, _ = lax.fori_loop(0, steps, body, (y0, pipe0))
+        return y

@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim for the property tests.
+
+The container image may not ship ``hypothesis``.  Property-based tests are
+a bonus tier: when the library is missing they individually skip, while the
+example-based tests in the same modules keep running.  Import from here
+instead of ``hypothesis`` directly:
+
+    from _hyp import given, settings, st
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on image contents
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _NullStrategies:
+        """Accepts any strategy construction; values are never drawn
+        because ``given`` skips the test."""
+
+        def __getattr__(self, _name):
+            def _strategy(*_a, **_k):
+                return None
+
+            return _strategy
+
+    st = _NullStrategies()

@@ -1,0 +1,212 @@
+"""Cross-backend transport equivalence (the transport-refactor contract).
+
+The same collective call site, selected only by a string key, must produce
+*bit-identical* results under every transport backend — static trace-time
+schedules, the dynamic packet router run end-to-end, and the Pallas-fused
+hot path — on both the physical torus and the snake-bus logical topology,
+with zero packet overflow (lossless routing) asserted for every router run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    Communicator,
+    Topology,
+    make_test_mesh,
+    stream_allgather,
+    stream_allreduce,
+    stream_bcast,
+    stream_p2p,
+)
+from repro.core.router import snake_bus
+from repro.mesh.api import colparallel_matmul, make_ctx
+from repro.transport import (
+    Transport,
+    available_transports,
+    get_transport,
+    resolve_comm_mode,
+    resolve_transport,
+)
+
+BACKENDS = ("static", "packet", "fused")
+
+
+def _transport(name):
+    # fused: force the Pallas kernel through the interpreter on CPU so the
+    # fused code path (not just its jnp fallback) is what gets verified
+    if name == "fused":
+        return get_transport(name, interpret=jax.default_backend() != "tpu")
+    return get_transport(name)
+
+
+def _run_collectives(comm, mesh, spec, x, backend):
+    """One traced fn running Bcast + AllGather + AllReduce over ``backend``,
+    returning the packet-overflow count as a regular output."""
+
+    def fn(v):
+        t = _transport(backend)
+        bc = stream_bcast(v[0], comm, root=0, n_chunks=4, transport=t)
+        ag = stream_allgather(v[0], comm, transport=t)
+        ar = stream_allreduce(v[0], comm, transport=t)
+        ovf = t.stats.overflow
+        if ovf is None:
+            ovf = jnp.zeros((), jnp.int32)
+        return bc[None], ag[None], ar[None], ovf[None]
+
+    out = jax.jit(
+        jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=(spec,) * 4)
+    )(x)
+    return jax.tree.map(np.asarray, out)
+
+
+TOPOLOGIES = {
+    "torus": lambda: (
+        make_test_mesh((8,), ("x",)),
+        Communicator.create("x", (8,)),
+        P("x"),
+    ),
+    "snake_bus": lambda: (
+        make_test_mesh((2, 4), ("x", "y")),
+        Communicator.create(("x", "y"), (2, 4), topology=snake_bus((2, 4))),
+        P(("x", "y")),
+    ),
+    # non-default routing scheme: the packet router must follow the
+    # communicator's own (BFS) routes, not recompute DOR ones
+    "torus_bfs": lambda: (
+        make_test_mesh((8,), ("x",)),
+        Communicator.create("x", (8,), routing_scheme="bfs"),
+        P("x"),
+    ),
+}
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+def test_collectives_bit_identical_across_backends(topo, devices8):
+    mesh, comm, spec = TOPOLOGIES[topo]()
+    x = jnp.asarray(np.random.RandomState(0).randn(8, 16), jnp.float32)
+
+    results = {b: _run_collectives(comm, mesh, spec, x, b) for b in BACKENDS}
+    for b in BACKENDS:
+        ovf = results[b][3]
+        assert int(ovf.sum()) == 0, f"{b} on {topo}: packet overflow {ovf}"
+    for b in BACKENDS[1:]:
+        for k, name in enumerate(["bcast", "allgather", "allreduce"]):
+            np.testing.assert_array_equal(
+                results[BACKENDS[0]][k], results[b][k],
+                err_msg=f"{name}: {b} != {BACKENDS[0]} on {topo}",
+            )
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_p2p_multihop_matches_static(topo, backend, devices8):
+    mesh, comm, spec = TOPOLOGIES[topo]()
+    x = jnp.asarray(np.random.RandomState(1).randn(8, 8), jnp.float32)
+
+    def fn(v):
+        y = stream_p2p(
+            v[0], src=0, dst=5, comm=comm, n_chunks=2,
+            transport=_transport(backend),
+        )
+        return y[None]
+
+    got = np.asarray(
+        jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec))(x)
+    )
+    want = np.zeros_like(np.asarray(x))
+    want[5] = np.asarray(x)[0]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_packet_overflow_counter_reports_drops(devices8):
+    """An under-provisioned transit queue must lose packets AND say so —
+    the counter is the lossless-run oracle of the equivalence tests, so
+    prove it can fire (no silent truncation)."""
+    mesh = make_test_mesh((2, 4), ("x", "y"))
+    comm = Communicator.create(("x", "y"), (2, 4))
+    spec = P(("x", "y"))
+
+    def fn(v):
+        # Two DOR routes (4->2 and 7->1) converge on rank 0 and both leave
+        # via its +y link: arrivals outpace the drain, and a 1-deep transit
+        # queue must drop and count.
+        t = get_transport("packet", pkt_elems=4, transit_cap=1)
+        y = t.permute(v[0], comm, [(4, 2), (7, 1)])
+        return y[None], jnp.asarray(t.stats.overflow, jnp.int32)[None]
+
+    x = jnp.ones((8, 64), jnp.float32)
+    _y, ovf = jax.jit(
+        jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=(spec, spec))
+    )(x)
+    assert int(np.asarray(ovf).sum()) > 0
+
+
+def test_registry_keys_and_resolution():
+    assert set(BACKENDS) <= set(available_transports())
+    t = get_transport("packet")
+    assert isinstance(t, Transport) and t.name == "packet"
+    with pytest.raises(KeyError):
+        get_transport("carrier-pigeon")
+    # per-communicator default + per-call override
+    comm = Communicator.create("x", (4,), transport="fused")
+    assert resolve_transport(None, comm).name == "fused"
+    assert resolve_transport("static", comm).name == "static"
+    assert resolve_transport(t, comm) is t
+    assert comm.with_transport("packet").transport == "packet"
+
+
+def test_resolve_comm_mode():
+    assert resolve_comm_mode("smi") == ("smi", "static")
+    assert resolve_comm_mode("smi:packet") == ("smi", "packet")
+    assert resolve_comm_mode("bulk") == ("bulk", "static")
+    assert resolve_comm_mode(None)[0] == "none"
+    with pytest.raises(ValueError):
+        resolve_comm_mode("smi:warp-drive")
+    with pytest.raises(ValueError):
+        resolve_comm_mode("bulk:static")
+
+
+def test_fused_accumulate_matches_jnp():
+    from repro.transport.fused import fused_accumulate
+
+    rng = np.random.RandomState(2)
+    for shape in [(5,), (33, 7), (4, 128), (1000,)]:
+        a = jnp.asarray(rng.randn(*shape), jnp.float32)
+        b = jnp.asarray(rng.randn(*shape), jnp.float32)
+        got = fused_accumulate(a, b, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(a + b))
+
+
+@pytest.mark.parametrize("mode", ["smi:static", "smi:packet", "smi:fused"])
+def test_model_layer_helper_over_backends(mode, devices8):
+    """The mesh-api helper the model layers call (colparallel_matmul) runs
+    unmodified under every smi:<backend> comm_mode and agrees with bulk."""
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(8, 16), jnp.float32)   # (t, K) seq-sharded
+    w = jnp.asarray(rng.randn(16, 12), jnp.float32)  # (K, N) col-sharded
+
+    def make_fn(m):
+        # off TPU the fused backend falls back to ppermute + jnp add — the
+        # documented CPU path; the kernel itself is covered above
+        ctx = make_ctx(mesh, model_axis="model", batch_axes=("data",),
+                       comm_mode=m)
+
+        def fn(xv, wv):
+            return colparallel_matmul(xv, wv, ctx)
+
+        return fn
+
+    spec_x = P(("data", "model"))
+    out = {}
+    for m in ["bulk", mode]:
+        f = jax.jit(jax.shard_map(
+            make_fn(m), mesh=mesh,
+            in_specs=(spec_x, P(None, "model")), out_specs=spec_x,
+        ))
+        out[m] = np.asarray(f(x, w))
+    np.testing.assert_allclose(out[mode], out["bulk"], rtol=1e-5, atol=1e-5)
