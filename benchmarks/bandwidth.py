@@ -11,7 +11,11 @@ path).  The paper's claims, reproduced structurally:
 ``--transport`` sweeps the streamed path over the pluggable backends
 (static ppermute schedule vs the dynamic packet router end to end).
 
-Derived column: TPU-v5e time model = steps x (chunk_bytes / ICI_BW).
+Derived column: the shared netsim :class:`~repro.netsim.LinkModel` v5e
+figure, ``(n_chunks + hops - 1)`` chunk-hops for the pipelined path vs
+``hops`` full-message hops staged — the same model the simulator and
+autotuner use.  ``--validate-sim`` fits a CPU-calibrated model to the
+static-backend measurements and gates prediction/measurement drift at 2x.
 """
 
 import argparse
@@ -24,8 +28,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import Communicator, Topology, make_test_mesh, stream_p2p
 from repro.core.streaming import _mask_sel, _pvary
+from repro.netsim import calibrate, predict_transport_stats
 
-from .common import ICI_BW, csv_row, make_bench_transport, timeit
+from .common import V5E_MODEL, csv_row, make_bench_transport, timeit
 
 #: packet payload for the p2p train (scaled from the paper's 28 B packet)
 PACKET_BENCH_ELEMS = 4096
@@ -40,21 +45,21 @@ def staged_p2p(x, *, src, dst, comm):
     return buf
 
 
-def run(transports=("static", "packet")):
+def run(transports=("static", "packet"), validate_sim=False):
     mesh = make_test_mesh((8,), ("x",))
     comm = Communicator.create("x", (8,), topology=Topology.bus(8))
     rows = []
+    records = []
     n_chunks = 16
     for log2_kb in [4, 8, 12]:            # 16 KB .. 4 MB per rank
         elems = (1 << log2_kb) * 256      # f32
         x = jnp.ones((8, elems), jnp.float32)
         for dst, hops in [(1, 1), (4, 4), (7, 7)]:
             mb = elems * 4 / 2**20
-            # v5e model: pipelined = (n_chunks + hops - 1) chunk-hops;
-            # staged = hops full-message serial hops
-            chunk_b = elems * 4 / n_chunks
-            model_smi = (n_chunks + hops - 1) * chunk_b / ICI_BW
-            model_stg = hops * elems * 4 / ICI_BW
+            # shared netsim model: pipelined = (n_chunks + hops - 1)
+            # chunk-hops; staged = hops full-message serial hops
+            model_smi = V5E_MODEL.p2p_time(elems * 4, hops, n_chunks)
+            model_stg = V5E_MODEL.staged_time(elems * 4, hops)
             bw_smi = elems * 4 / model_smi / 1e9
             bw_stg = elems * 4 / model_stg / 1e9
             for tname in transports:
@@ -64,7 +69,22 @@ def run(transports=("static", "packet")):
                         transport=make_bench_transport(tn, pkt_elems=PACKET_BENCH_ELEMS),
                     )[None],
                     mesh=mesh, in_specs=P("x"), out_specs=P("x")))
-                t_smi = timeit(f_smi, x)
+                # more timing iterations for the rows that feed the drift
+                # gate: the 2x tolerance must gate schedule drift, not a
+                # noisy median
+                t_smi = timeit(f_smi, x,
+                               iters=9 if validate_sim and log2_kb <= 8 else 5)
+                # drift-gate records: static backend at the sizes whose CPU
+                # wall times are measurement-stable (the largest size's
+                # multi-MB host memcpys jitter several-x run to run, which
+                # would gate on machine noise, not schedule drift)
+                if validate_sim and tname == "static" and log2_kb <= 8:
+                    steps, nbytes = predict_transport_stats(
+                        comm, "p2p", shape=(elems,), src=0, dst=dst,
+                        n_chunks=n_chunks,
+                    )
+                    records.append(calibrate.record(
+                        steps, nbytes, t_smi, f"{mb:.2f}MB,hops={hops}"))
                 csv_row(
                     f"bandwidth_fig9,{mb:.2f}MB,hops={hops},smi[{tname}]",
                     t_smi * 1e6,
@@ -82,6 +102,8 @@ def run(transports=("static", "packet")):
             )
             rows.append((mb, hops, "staged", t_stg, bw_stg))
     # paper claim check: smi bandwidth roughly hop-independent (model exact)
+    if validate_sim:
+        calibrate.validate(records, tol=2.0, label="bandwidth_fig9")
     return rows
 
 
@@ -89,8 +111,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--transport", default="static,packet",
                     help="comma-separated transport backends to sweep")
+    ap.add_argument("--validate-sim", action="store_true")
     args = ap.parse_args(argv)
-    run(transports=tuple(args.transport.split(",")))
+    run(transports=tuple(args.transport.split(",")),
+        validate_sim=args.validate_sim)
 
 
 if __name__ == "__main__":

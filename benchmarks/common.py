@@ -5,21 +5,40 @@ report wall-time medians of the compiled program plus derived TPU-v5e
 figures from the schedule structure (steps × bytes/link) — this container
 is CPU-only, so absolute wall-times are CPU-relative but *ratios* between
 SMI and baselines mirror the schedule structure the paper measures.
+
+Model constants come from the shared :class:`repro.netsim.LinkModel`
+(``V5E_MODEL``) so the benchmark-derived columns and the netsim simulator
+can never drift apart; ``--validate-sim`` (benchmarks/run.py) asserts the
+other direction — that the simulator's schedule predictions track what
+actually executes.
+
+Every ``csv_row`` is also recorded into :data:`RESULTS` so
+``benchmarks/run.py --json`` can emit machine-readable results for
+``BENCH_*.json`` perf-trajectory files.
 """
 
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import time
+# imported after XLA_FLAGS is set: the repro package pulls in jax
+from repro.netsim import LinkModel  # noqa: E402
 
-import jax
-import numpy as np
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+#: the single source of truth for derived "v5e model" columns
+V5E_MODEL = LinkModel.default_v5e()
 
 # TPU v5e model constants (per chip)
-PEAK_FLOPS = 197e12      # bf16
-HBM_BW = 819e9           # B/s
-ICI_BW = 50e9            # B/s per link per direction
+PEAK_FLOPS = 197e12              # bf16
+HBM_BW = 819e9                   # B/s
+ICI_BW = V5E_MODEL.link_bw       # B/s per link per direction
+
+#: machine-readable mirror of every csv_row printed this process
+RESULTS: list = []
 
 
 def timeit(fn, *args, warmup=2, iters=5):
@@ -36,6 +55,13 @@ def timeit(fn, *args, warmup=2, iters=5):
 
 def csv_row(name, us_per_call, derived=""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    head, _, params = name.partition(",")
+    RESULTS.append({
+        "name": head,
+        "params": params,
+        "us_per_call": round(float(us_per_call), 3),
+        "derived": derived,
+    })
 
 
 def make_bench_transport(name, *, pkt_elems=2048):

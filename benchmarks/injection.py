@@ -17,6 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import Communicator, Topology, make_test_mesh
 from repro.core.router import RouterConfig, make_router_tables, run_router
+from repro.netsim import Message, simulate
 
 from .common import csv_row, timeit
 
@@ -24,7 +25,24 @@ DIMS = (2, 4)
 N = 8
 
 
-def run():
+def _sim_drain(comm, R, n_pkts=8):
+    """Replay the bench's contention workload in the netsim link simulator:
+    per rank, two staged FIFOs (1-hop and 2-hop +y destinations) competing
+    for the same link under R-sticky arbitration with the switch bubble —
+    predicted drain steps for the measured run."""
+    msgs = []
+    for r in range(N):
+        row, col = divmod(r, 4)
+        for port, delta in [(0, 1), (1, 2)]:
+            dst = row * 4 + (col + delta) % 4
+            msgs.append(Message(r, dst, n_flits=n_pkts, flit_bytes=32 * 4,
+                                port=port, pipelined=False))
+    rep = simulate(comm.topology, comm.route_table, msgs,
+                   R=R, switch_bubble=True)
+    return rep.ticks
+
+
+def run(validate_sim=False):
     mesh = make_test_mesh(DIMS, ("x", "y"))
     comm = Communicator.create(("x", "y"), DIMS)
     tbl = jnp.asarray(make_router_tables(Topology.torus(DIMS), DIMS))
@@ -61,10 +79,23 @@ def run():
         drain = int(np.asarray(td).max()) + 1  # steps until last delivery
         t = timeit(f, *args)
         cyc_per_pkt = drain / (delivered / N)  # per-rank steps per packet
+        sim_drain = _sim_drain(comm, R)
         csv_row(f"injection_tab4,R={R}", t * 1e6,
                 f"delivered={delivered},drain_steps={drain},"
+                f"sim_drain={sim_drain},"
                 f"steps_per_pkt={cyc_per_pkt:.2f},overflow={lost}")
-        out.append((R, delivered, cyc_per_pkt))
+        out.append((R, delivered, cyc_per_pkt, drain, sim_drain))
+    if validate_sim:
+        worst = 1.0
+        for R, _d, _c, drain, sim_drain in out:
+            ratio = max(drain / sim_drain, sim_drain / drain)
+            worst = max(worst, ratio)
+            assert ratio <= 2.0, (
+                f"injection_tab4 R={R}: simulated drain {sim_drain} vs "
+                f"measured {drain} steps drifted past 2x"
+            )
+        print(f"# [injection_tab4] validate-sim OK: worst drain ratio "
+              f"{worst:.2f}x (<= 2.0x)")
     return out
 
 

@@ -3,8 +3,15 @@
 The paper measures half round-trip of a ping-pong.  Structurally, SMI
 latency = hops x per-hop cost; the host-staged path pays the full
 PCIe+MPI+PCIe stack once regardless of distance (36.61 us measured there).
-We time a 1-chunk channel across 1/4/7 bus hops and report the v5e model
-(hop cost ≈ 1 us ICI + chunk serialisation).
+We time a 1-chunk channel across 1/4/7 bus hops and report the shared
+netsim :class:`~repro.netsim.LinkModel`'s v5e figure next to it (hop cost
+≈ 1 us ICI + chunk serialisation) — the same model the simulator and the
+autotuner use, so the derived column cannot drift from them.
+
+``--validate-sim`` fits a CPU-calibrated LinkModel to the measurements
+(schedule steps/bytes from netsim's exact stats prediction) and asserts
+every prediction lands within 2x of its measurement — the drift gate
+between the simulator's schedule structure and what actually executes.
 """
 
 import jax
@@ -12,27 +19,33 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import Communicator, Topology, make_test_mesh, stream_p2p
+from repro.netsim import calibrate, predict_transport_stats
 
-from .common import ICI_BW, csv_row, timeit
-
-HOP_LAT = 1e-6  # ~1us per ICI hop (v5e-class)
+from .common import V5E_MODEL, csv_row, timeit
 
 
-def run():
+def run(validate_sim=False):
     mesh = make_test_mesh((8,), ("x",))
     comm = Communicator.create("x", (8,), topology=Topology.bus(8))
     elems = 8  # one tiny packet
     x = jnp.ones((8, elems), jnp.float32)
     out = []
+    records = []
     for dst, hops in [(1, 1), (4, 4), (7, 7)]:
         f = jax.jit(jax.shard_map(
             lambda v: stream_p2p(v[0], src=0, dst=dst, comm=comm, n_chunks=1)[None],
             mesh=mesh, in_specs=P("x"), out_specs=P("x")))
-        t = timeit(f, x)
-        model = hops * (HOP_LAT + elems * 4 / ICI_BW)
+        t = timeit(f, x, iters=9 if validate_sim else 5)
+        model = V5E_MODEL.p2p_time(elems * 4, hops, n_chunks=1)
+        steps, nbytes = predict_transport_stats(
+            comm, "p2p", shape=(elems,), src=0, dst=dst, n_chunks=1,
+        )
+        records.append(calibrate.record(steps, nbytes, t, f"hops={hops}"))
         csv_row(f"latency_tab3,hops={hops}", t * 1e6,
                 f"v5e_model_us={model * 1e6:.2f}")
         out.append((hops, t, model))
+    if validate_sim:
+        calibrate.validate(records, tol=2.0, label="latency_tab3")
     return out
 
 

@@ -5,9 +5,19 @@ Prints ``name,us_per_call,derived`` CSV rows.  Runs on 8 host devices
 come from launch/dryrun.py + launch/roofline.py instead.
 
     PYTHONPATH=src python -m benchmarks.run [--only bandwidth,...]
+                                            [--json out.json]
+                                            [--validate-sim]
+
+``--json`` writes every row machine-readably (suite, name, params,
+us_per_call, derived) for BENCH_*.json perf-trajectory files (DESIGN.md
+§6).  ``--validate-sim`` makes the suites that have a netsim prediction
+(latency, bandwidth, injection) assert prediction-vs-measurement agreement
+within 2x — the simulator/measurement drift gate CI runs.
 """
 
 import argparse
+import inspect
+import json
 import sys
 import time
 import traceback
@@ -29,20 +39,41 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of suites")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write machine-readable results to OUT")
+    ap.add_argument("--validate-sim", action="store_true",
+                    help="assert netsim predictions within 2x of measurement")
     args = ap.parse_args()
     todo = args.only.split(",") if args.only else SUITES
     failures = []
+    results = []
     for name in todo:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         print(f"# --- {name} ---", flush=True)
         t0 = time.time()
+        n0 = len(common.RESULTS)
+        kwargs = {}
+        if args.validate_sim and \
+                "validate_sim" in inspect.signature(mod.run).parameters:
+            kwargs["validate_sim"] = True
         try:
-            mod.run()
+            mod.run(**kwargs)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
             print(f"# {name} FAILED: {e}", flush=True)
+        for row in common.RESULTS[n0:]:
+            results.append({"suite": name, **row})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "argv": sys.argv[1:],
+                "validate_sim": args.validate_sim,
+                "failures": failures,
+                "rows": results,
+            }, f, indent=1)
+        print(f"# wrote {len(results)} rows to {args.json}")
     if failures:
         print(f"# FAILED suites: {failures}")
         sys.exit(1)

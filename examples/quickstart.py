@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import (
     Communicator,
     Topology,
+    bcast,
     make_test_mesh,
     open_channel,
     pop,
@@ -76,6 +77,18 @@ def main():
     for r in range(8):
         np.testing.assert_allclose(np.asarray(out[r]), np.asarray(msg[SRC]))
     print("streamed p2p + broadcast: all 8 ranks hold rank-0's message ✓")
+
+    # ---- one-line autotuned collective ---------------------------------
+    # bcast() consults the netsim tuning table (DESIGN.md §6): the link
+    # simulator picks the schedule shape, chunk count and transport backend
+    # for this topology and message size — no manual n_chunks to get wrong.
+    out = jax.jit(jax.shard_map(
+        lambda v: bcast(v[0], comm, root=SRC)[None],
+        mesh=mesh, in_specs=P("x"), out_specs=P("x")))(msg)
+    for r in range(8):
+        np.testing.assert_allclose(np.asarray(out[r]), np.asarray(msg[SRC]))
+    plan = comm.plan("bcast", msg[SRC].size * 4)
+    print(f"autotuned bcast ✓ (netsim chose {plan})")
 
 
 if __name__ == "__main__":

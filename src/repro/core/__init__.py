@@ -28,6 +28,9 @@ from .streaming import (
     pvary,
 )
 from .collectives import (
+    allreduce,
+    bcast,
+    reduce,
     stream_allgather,
     stream_reduce_scatter,
     stream_allreduce,
@@ -62,6 +65,9 @@ __all__ = [
     "run_spmd",
     "make_test_mesh",
     "pvary",
+    "allreduce",
+    "bcast",
+    "reduce",
     "stream_allgather",
     "stream_reduce_scatter",
     "stream_allreduce",

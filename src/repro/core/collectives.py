@@ -442,6 +442,66 @@ def tree_reduce(
 
 
 # ---------------------------------------------------------------------------
+# Autotuned dispatchers (netsim tuning table -> schedule selection)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_plan(plan, op: str, comm: Communicator, x):
+    """Turn a plan argument into a concrete netsim Plan.
+
+    ``"auto"`` consults the communicator's cached tuning table for the
+    message's byte size; ``None`` is the static default; a
+    :class:`repro.netsim.tune.Plan` passes through."""
+    from ..netsim.tune import DEFAULT_PLAN, Plan
+
+    if plan is None:
+        return DEFAULT_PLAN
+    if isinstance(plan, Plan):
+        return plan
+    assert plan == "auto", f"plan must be 'auto', None or a Plan; got {plan!r}"
+    return comm.plan(op, int(x.size) * x.dtype.itemsize)
+
+
+def bcast(x: jax.Array, comm: Communicator, *, root: int = 0,
+          plan="auto", transport=None):
+    """Autotuned broadcast: the netsim tuning table picks the schedule
+    (pipelined chain / binomial tree / staged), the chunk count and the
+    transport backend for this topology and message size.  ``transport``
+    overrides the tuned backend; ``plan=None`` forces the static default."""
+    p = _resolve_plan(plan, "bcast", comm, x)
+    tp = transport if transport is not None else p.transport
+    if p.algo == "tree":
+        return tree_bcast(x, comm, root=root, transport=tp)
+    if p.algo == "staged":
+        return staged_bcast(x, comm, root=root, transport=tp)
+    return stream_bcast(x, comm, root=root,
+                        n_chunks=p.clamp_chunks(x.shape[0]), transport=tp)
+
+
+def reduce(x: jax.Array, comm: Communicator, *, root: int = 0, op=jnp.add,
+           plan="auto", transport=None):
+    """Autotuned rooted reduction (same dispatch rules as :func:`bcast`)."""
+    p = _resolve_plan(plan, "reduce", comm, x)
+    tp = transport if transport is not None else p.transport
+    if p.algo == "tree":
+        return tree_reduce(x, comm, root=root, op=op, transport=tp)
+    if p.algo == "staged":
+        return staged_reduce(x, comm, root=root, op=op, transport=tp)
+    return stream_reduce(x, comm, root=root, op=op,
+                         n_chunks=p.clamp_chunks(x.shape[0]), transport=tp)
+
+
+def allreduce(x: jax.Array, comm: Communicator, *, plan="auto",
+              transport=None, **kw):
+    """Autotuned ring all-reduce.  Only the plan's transport applies here:
+    the RS+AG schedule fixes its own chunking (nbytes/P blocks), so the
+    tuner sweeps no chunk grid for this op and ``plan.n_chunks`` is moot."""
+    p = _resolve_plan(plan, "allreduce", comm, x)
+    tp = transport if transport is not None else p.transport
+    return stream_allreduce(x, comm, transport=tp, **kw)
+
+
+# ---------------------------------------------------------------------------
 # Host-staged baseline (the paper's MPI+OpenCL comparison point)
 # ---------------------------------------------------------------------------
 

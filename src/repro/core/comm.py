@@ -79,6 +79,15 @@ class Communicator:
         """Same ranks/routes, different message-moving backend."""
         return replace(self, transport=transport)
 
+    def plan(self, op: str, nbytes: int):
+        """The netsim autotuner's decision for ``op`` at ``nbytes`` on this
+        communicator's topology (cached per topology signature).  This is
+        what the ``bcast``/``reduce``/``allreduce`` dispatchers and
+        ``stream_p2p(plan="auto")`` consult by default."""
+        from ..netsim.tune import tuned_plan
+
+        return tuned_plan(op, self, nbytes)
+
     # -- rank queries (trace-time inside shard_map) --------------------------
 
     @property

@@ -70,6 +70,7 @@ def stream_p2p(
     comm: Communicator,
     n_chunks: int = 1,
     transport=None,
+    plan=None,
 ) -> jax.Array:
     """Stream ``x`` (resident on ``src``) to ``dst`` along the routed path.
 
@@ -79,8 +80,26 @@ def stream_p2p(
     static/fused backends run the chunk-pipelined multi-hop ppermute
     schedule (``n_chunks`` chunks in flight, the asynchronicity degree k of
     §3.3); the packet backend stages the message into the dynamic router.
+
+    ``plan="auto"`` (or an explicit :class:`repro.netsim.tune.Plan`) lets
+    the netsim tuning table choose the backend and chunk count for this
+    topology and message size; explicit ``transport``/``n_chunks`` keep
+    their meaning when no plan is given.
     """
     from ..transport.registry import resolve_transport
+
+    if plan is not None:
+        from ..netsim.tune import Plan
+
+        if not isinstance(plan, Plan):
+            assert plan == "auto", (
+                f"plan must be 'auto', None or a Plan; got {plan!r}"
+            )
+            nbytes = x.size * x.dtype.itemsize
+            plan = comm.plan("p2p", int(nbytes))
+        if transport is None:
+            transport = plan.transport
+        n_chunks = plan.clamp_chunks(x.shape[0])
 
     return resolve_transport(transport, comm).p2p(
         x, src=src, dst=dst, comm=comm, n_chunks=n_chunks

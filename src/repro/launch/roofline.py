@@ -44,13 +44,16 @@ from ..models.transformer import (
     init_block_cache,
     REMAT_POLICIES,
 )
+from ..netsim import LinkModel
 from .dryrun import collective_bytes
 from .mesh import batch_axes_of, make_production_mesh
 from .steps import globalize_structs, _sh
 
 PEAK = 197e12     # bf16 FLOP/s per v5e chip
 HBM = 819e9       # B/s
-ICI = 50e9        # B/s per link
+# collective term comes from the shared netsim link model (the same one the
+# benchmarks' derived columns and the autotuner use), not an ad-hoc constant
+NET_MODEL = LinkModel.default_v5e()
 
 
 def _probe_period(cfg, shape, mesh, *, comm_mode="smi", remat="nothing",
@@ -224,7 +227,7 @@ def analyze_cell(rec, *, comm_mode="smi", remat="nothing",
     terms = {
         "compute_s": total["flops"] / PEAK,
         "memory_s": total["bytes"] / HBM,
-        "collective_s": total["coll"] / ICI,
+        "collective_s": NET_MODEL.serialization(total["coll"]),
     }
     dominant = max(terms, key=terms.get)
     mf = model_flops_per_device(cfg, shape, n_chips)

@@ -1,0 +1,68 @@
+"""netsim: link-level network simulation + cost-model autotuning.
+
+The paper's evaluation is a performance model made measurable — latency vs
+hops (Tab. 3), injection rate vs polling stickiness R (Tab. 4), bandwidth
+vs frame size (Fig. 9).  This subsystem is that model made *executable*:
+
+* :mod:`~repro.netsim.model` — :class:`LinkModel`, the analytic per-link
+  cost model every benchmark/roofline column derives from;
+* :mod:`~repro.netsim.sim` — a tick-based link-level simulator replaying
+  message schedules over any Topology + RouteTable with FIFO depths,
+  R-sticky arbitration and backpressure;
+* :mod:`~repro.netsim.schedule` — schedule builders mirroring the real
+  transports, plus exact :class:`TransportStats` prediction;
+* :mod:`~repro.netsim.calibrate` — fit a LinkModel from measured runs and
+  gate simulator/measurement drift (``benchmarks/run.py --validate-sim``);
+* :mod:`~repro.netsim.tune` — the autotuner producing cached
+  :class:`TuningTable` s that ``Communicator``/collectives consult.
+
+See DESIGN.md §6 for the subsystem contract.
+"""
+
+from .model import LinkModel
+from .sim import Message, SimReport, simulate, simulate_rounds
+from .schedule import (
+    collective_rounds,
+    p2p_messages,
+    packet_bounds,
+    packet_n_packets,
+    predict_transport_stats,
+    ring_perm_round,
+)
+from .calibrate import fit, record, record_from_stats, validate
+from .tune import (
+    DEFAULT_PLAN,
+    Plan,
+    SIZE_GRID,
+    TuningTable,
+    autotune,
+    score_plan,
+    tuned_plan,
+    tuning_table_for,
+)
+
+__all__ = [
+    "LinkModel",
+    "Message",
+    "SimReport",
+    "simulate",
+    "simulate_rounds",
+    "collective_rounds",
+    "p2p_messages",
+    "packet_bounds",
+    "packet_n_packets",
+    "predict_transport_stats",
+    "ring_perm_round",
+    "fit",
+    "record",
+    "record_from_stats",
+    "validate",
+    "DEFAULT_PLAN",
+    "Plan",
+    "SIZE_GRID",
+    "TuningTable",
+    "autotune",
+    "score_plan",
+    "tuned_plan",
+    "tuning_table_for",
+]

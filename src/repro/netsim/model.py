@@ -1,0 +1,134 @@
+"""The analytic link cost model (paper Tab. 3 / Tab. 4 / Fig. 9 quantities).
+
+One :class:`LinkModel` instance answers every "how long does this schedule
+take" question in the repo — benchmarks derive their model columns from it,
+the discrete-event simulator (:mod:`repro.netsim.sim`) converts ticks to
+seconds through it, the autotuner (:mod:`repro.netsim.tune`) scores
+candidate plans with it, and ``launch/roofline.py`` uses it for the
+collective roofline term.  Before this module existed those four call sites
+each hard-coded their own constants and could silently drift apart.
+
+Quantities, mapped to the paper:
+
+* ``hop_latency`` — per-hop forwarding cost (Tab. 3: latency = hops x
+  per-hop cost; ~1 us per ICI hop on a v5e-class part).
+* ``link_bw`` — per-link per-direction serialization bandwidth (Fig. 9's
+  plateau; 50 GB/s on v5e ICI).
+* ``injection_base`` — fixed per-transfer overhead (dispatch / rendezvous;
+  the host-staged path pays a large one, the streamed path a small one).
+* ``switch_cycles`` — the router's polling-stickiness cost (Tab. 4): with
+  stickiness R the arbiter burns ~``switch_cycles / R`` extra cycles per
+  packet acquiring a new input FIFO (paper: 5 cycles/packet at R=1 falling
+  to 1.69 at R=16).
+
+The module is deliberately jax-free (pure python + numpy) so it can be
+imported before jax initialises (benchmarks set XLA_FLAGS first) and used
+from offline tooling.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """Per-link cost parameters; all times in seconds, sizes in bytes."""
+
+    hop_latency: float = 1e-6     # s per hop (v5e ICI class)
+    link_bw: float = 50e9         # B/s per link per direction
+    injection_base: float = 0.0   # s fixed overhead per transfer
+    switch_cycles: float = 4.0    # extra arbiter cycles at R=1 (Tab. 4)
+
+    # -- primitive costs ---------------------------------------------------
+
+    def serialization(self, nbytes: float) -> float:
+        """Wire time of ``nbytes`` through one link (Fig. 9 plateau)."""
+        return nbytes / self.link_bw
+
+    def hop_time(self, flit_bytes: float) -> float:
+        """One pipeline tick: forward a ``flit_bytes`` chunk one hop."""
+        return self.hop_latency + self.serialization(flit_bytes)
+
+    def injection_cycles(self, R: int) -> float:
+        """Router cycles per packet as a function of polling stickiness R
+        (Tab. 4: 5 cycles at R=1, approaching 1 as R grows)."""
+        return 1.0 + self.switch_cycles / max(int(R), 1)
+
+    # -- transfer-level costs (the quantities the benchmarks print) --------
+
+    def p2p_time(self, nbytes: float, hops: int, n_chunks: int = 1) -> float:
+        """Chunk-pipelined routed transfer: ``n_chunks + hops - 1`` ticks of
+        one chunk each (paper Fig. 9 / Tab. 3 by construction)."""
+        n_chunks = max(int(n_chunks), 1)
+        ticks = n_chunks + max(int(hops), 0) - 1 if hops else 0
+        if hops == 0:
+            return 0.0
+        return self.injection_base + ticks * self.hop_time(nbytes / n_chunks)
+
+    def staged_time(self, nbytes: float, hops: int) -> float:
+        """Store-and-forward whole-message transfer: the full message
+        completes each hop before the next (the paper's host-staged path)."""
+        return self.injection_base + hops * self.hop_time(nbytes)
+
+    def bandwidth(self, nbytes: float, hops: int, n_chunks: int = 1) -> float:
+        """Effective p2p bandwidth in B/s."""
+        t = self.p2p_time(nbytes, hops, n_chunks)
+        return nbytes / t if t > 0 else float("inf")
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def default_v5e() -> "LinkModel":
+        """The TPU-v5e ICI figures the benchmarks' derived columns use."""
+        return LinkModel()
+
+    def with_params(self, **kw) -> "LinkModel":
+        return replace(self, **kw)
+
+    # -- calibration -------------------------------------------------------
+
+    @staticmethod
+    def fit(records, *, base: "LinkModel | None" = None):
+        """Least-squares fit of (hop_latency, link_bw, injection_base) from
+        schedule-cost records.
+
+        ``records``: iterable of dicts with keys ``steps`` (schedule ticks,
+        the :class:`repro.transport.base.TransportStats` convention),
+        ``bytes`` (wire bytes, same convention) and ``seconds`` (measured).
+        Solves ``t = injection_base + steps * hop_latency + bytes / bw``
+        weighted by 1/t (relative error: a 4 MB transfer must not drown the
+        8-byte latency probes); negative coefficients are clamped to the
+        ``base`` model's values (measurement noise must not produce an
+        unphysical model).
+
+        Returns the fitted :class:`LinkModel`.
+        """
+        base = base or LinkModel.default_v5e()
+        recs = list(records)
+        if not recs:
+            return base
+        A = np.array([[1.0, r["steps"], r["bytes"]] for r in recs], float)
+        t = np.array([r["seconds"] for r in recs], float)
+        w = 1.0 / np.maximum(t, 1e-12)
+        coef, *_ = np.linalg.lstsq(A * w[:, None], t * w, rcond=None)
+        inj, hop, inv_bw = (float(c) for c in coef)
+        if inj < 0:
+            inj = 0.0
+        if hop <= 0:
+            hop = base.hop_latency
+        bw = 1.0 / inv_bw if inv_bw > 0 else base.link_bw
+        return base.with_params(
+            injection_base=inj, hop_latency=hop, link_bw=bw
+        )
+
+    def predict(self, record) -> float:
+        """Predicted seconds for one schedule-cost record (same keys as
+        :meth:`fit`)."""
+        return (
+            self.injection_base
+            + record["steps"] * self.hop_latency
+            + self.serialization(record["bytes"])
+        )

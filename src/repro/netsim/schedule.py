@@ -1,0 +1,241 @@
+"""Message schedules for the simulator, mirroring the real transports.
+
+Two jobs:
+
+1. **Schedule builders** — turn a logical operation (routed p2p, ring
+   shift, a collective under a given algorithm) into the :class:`~repro.
+   netsim.sim.Message` rounds the simulator replays.  The builders encode
+   the *same* schedules ``transport/static.py`` and ``core/collectives.py``
+   trace, so simulated tick counts are the schedule's step counts, not an
+   approximation of them.
+
+2. **predict_transport_stats** — the exact trace-time accounting a backend
+   would tally into :class:`~repro.transport.base.TransportStats` for an
+   operation (steps and wire bytes, per rank).  For the static backend this
+   is the simulator's tick count; for the packet backend it is the router's
+   static worst-case schedule bound, obtained from the *same*
+   ``PacketTransport._bounds`` code the device path runs (no parallel
+   formula to drift).  ``tests/test_netsim.py`` asserts equality against
+   real traced runs on ring, torus and snake-bus.
+"""
+
+from __future__ import annotations
+
+import math
+from types import SimpleNamespace
+
+from .sim import Message, simulate, simulate_rounds
+
+
+def _dtype_size(dtype) -> int:
+    import numpy as np
+
+    return np.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# schedule builders
+# ---------------------------------------------------------------------------
+
+
+def p2p_messages(rt, src: int, dst: int, nbytes: float, n_chunks: int = 1):
+    """The static transport's chunk-pipelined routed transfer."""
+    n_chunks = max(int(n_chunks), 1)
+    return [
+        Message(
+            src, dst, n_flits=n_chunks, flit_bytes=nbytes / n_chunks,
+            pipelined=True,
+        )
+    ]
+
+
+def ring_perm_round(n_ranks: int, nbytes: float, step: int = 1):
+    """One ring-shift step: every rank forwards its buffer to the next
+    linearised rank.  Routed through the route table, so on non-ring
+    topologies (e.g. a bus) the wrap-around edge costs its real multi-hop
+    path — exactly what the physical fabric pays for a logical ring."""
+    s = 1 if step > 0 else -1
+    return [
+        Message(i, (i + s) % n_ranks, n_flits=1, flit_bytes=nbytes)
+        for i in range(n_ranks)
+    ]
+
+
+def _expand_chain(rt, order):
+    """Route-expand a logical chain: each consecutive pair of the rank
+    ``order`` is replaced by its full routed path, so a logical hop that is
+    not a physical link costs its real multi-hop traversal (e.g. the wrap
+    edge of a linearised ring on a bus, or rank-order chains on a snake)."""
+    path = [order[0]]
+    for a, b in zip(order[:-1], order[1:]):
+        path.extend(rt.path(a, b)[1:])
+    return path
+
+
+def _chain_paths(topo, rt, root: int):
+    """Chain path(s) for the pipelined rooted collectives: one wrap-around
+    ring chain on tori, an up+down pair on line topologies (the schedule
+    ``core/collectives.py`` runs), route-expanded onto physical links."""
+    P = topo.n_ranks
+    if topo.dims is not None:
+        order = [[(root + i) % P for i in range(P)]]
+    else:
+        order = [p for p in (list(range(root, P)), list(range(root, -1, -1)))
+                 if len(p) >= 2]
+    return [_expand_chain(rt, o) for o in order]
+
+
+def collective_rounds(
+    topo, rt, op: str, algo: str, nbytes: float, *,
+    n_chunks: int = 1, root: int = 0,
+):
+    """Barrier-separated message rounds for ``op`` under ``algo``.
+
+    ops: ``bcast`` / ``reduce`` (rooted), ``allgather``, ``allreduce``.
+    algos: ``ring`` (the pipelined chain / ring schedule — the repo's
+    default), ``tree`` (binomial rounds), ``staged`` (serial whole-message
+    sends, the host-staged baseline).
+    """
+    P = topo.n_ranks
+    n_chunks = max(int(n_chunks), 1)
+    if P == 1:
+        return []
+
+    if op in ("bcast", "reduce"):
+        if algo == "ring":
+            # pipelined chain: n_chunks flits streamed along the chain(s);
+            # reduce runs the same schedule in reverse (same cost)
+            rounds = [[]]
+            for path in _chain_paths(topo, rt, root):
+                p = path if op == "bcast" else list(reversed(path))
+                rounds[0].append(
+                    Message(p[0], p[-1], n_flits=n_chunks,
+                            flit_bytes=nbytes / n_chunks, path=p)
+                )
+            return rounds
+        if algo == "tree":
+            rounds = []
+            h = 1
+            while h < P:
+                msgs = []
+                for i in range(h):
+                    if i + h >= P:
+                        continue
+                    a, b = (root + i) % P, (root + i + h) % P
+                    if op == "reduce":
+                        a, b = b, a
+                    msgs.append(Message(a, b, n_flits=1, flit_bytes=nbytes))
+                rounds.append(msgs)
+                h <<= 1
+            return rounds if op == "bcast" else list(reversed(rounds))
+        if algo == "staged":
+            # serial whole-message sends, one destination at a time
+            rounds = []
+            for d in range(1, P):
+                peer = (root + d) % P
+                a, b = (root, peer) if op == "bcast" else (peer, root)
+                rounds.append(
+                    [Message(a, b, n_flits=1, flit_bytes=nbytes,
+                             pipelined=False)]
+                )
+            return rounds
+        raise ValueError(f"unknown {op} algorithm {algo!r}")
+
+    if op == "allgather":
+        return [ring_perm_round(P, nbytes) for _ in range(P - 1)]
+    if op == "reduce_scatter":
+        return [ring_perm_round(P, nbytes / P) for _ in range(P - 1)]
+    if op == "allreduce":
+        # ring RS + AG of nbytes/P blocks — the stream_allreduce schedule
+        return [ring_perm_round(P, nbytes / P) for _ in range(2 * (P - 1))]
+    raise ValueError(f"unknown collective op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# packet-backend schedule bounds (shared with the device path)
+# ---------------------------------------------------------------------------
+
+
+def packet_bounds(rt, pairs, n_packets: int, *, pkt_elems: int = 32,
+                  slack_steps: int = 4, transit_cap: int | None = None):
+    """(n_steps, transit_cap) for a packet-routed permutation — computed by
+    ``PacketTransport._bounds`` itself so the simulator can never drift from
+    the schedule the device actually runs."""
+    from ..transport.packet import PacketTransport  # lazy: imports jax
+
+    tp = PacketTransport(
+        pkt_elems=pkt_elems, slack_steps=slack_steps, transit_cap=transit_cap
+    )
+    shim = SimpleNamespace(route_table=rt, size=rt.topo.n_ranks)
+    active = [(s, d) for s, d in pairs if s != d]
+    return tp._bounds(shim, active, n_packets)
+
+
+def packet_n_packets(n_elems: int, pkt_elems: int = 32) -> int:
+    """Packets per sender for an ``n_elems``-element wire vector (the f32
+    wire format of ``transport/packet.py``)."""
+    return -(-int(n_elems) // int(pkt_elems))
+
+
+# ---------------------------------------------------------------------------
+# exact TransportStats prediction
+# ---------------------------------------------------------------------------
+
+
+def predict_transport_stats(
+    comm, op: str, *, shape, dtype="float32", transport: str = "static",
+    src: int = 0, dst: int = 0, n_chunks: int = 1,
+    pkt_elems: int = 32, slack_steps: int = 4,
+):
+    """Exact (steps, bytes_moved) a fresh backend instance tallies for one
+    operation — the numbers ``Transport.stats`` holds after tracing.
+
+    ops: ``p2p`` (uses src/dst/n_chunks), ``shift`` (one ring step),
+    ``allgather`` (P-1 shifts of the local shard).  ``shape`` is the
+    per-rank array shape.
+    """
+    import numpy as np
+
+    elems = int(np.prod(shape)) if shape else 1
+    nbytes = elems * _dtype_size(dtype)
+    topo, rt = comm.topology, comm.route_table
+
+    if transport == "static":
+        if op == "p2p":
+            if src == dst:
+                return 0, 0
+            rep = simulate(topo, rt, p2p_messages(rt, src, dst, nbytes, n_chunks))
+            # the backend accounts chunk_bytes per tick (wire bytes per rank
+            # per step, the schedule-cost convention of TransportStats)
+            csz_bytes = nbytes // max(int(n_chunks), 1)
+            return rep.ticks, csz_bytes * rep.ticks
+        if op == "shift":
+            rep = simulate(topo, rt, ring_perm_round(comm.size, nbytes))
+            return rep.ticks, nbytes * rep.ticks
+        if op == "allgather":
+            ticks, _, _ = simulate_rounds(
+                topo, rt, collective_rounds(topo, rt, "allgather", "ring", nbytes)
+            )
+            return ticks, nbytes * ticks
+        raise ValueError(f"unknown op {op!r}")
+
+    if transport == "packet":
+        if op == "p2p":
+            if src == dst:
+                return 0, 0
+            K = packet_n_packets(elems, pkt_elems)
+            n_steps, _ = packet_bounds(
+                rt, [(src, dst)], K,
+                pkt_elems=pkt_elems, slack_steps=slack_steps,
+            )
+            return n_steps, nbytes
+        if op == "shift":
+            K = packet_n_packets(elems, pkt_elems)
+            pairs = [(i, (i + 1) % comm.size) for i in range(comm.size)]
+            n_steps, _ = packet_bounds(
+                rt, pairs, K, pkt_elems=pkt_elems, slack_steps=slack_steps
+            )
+            return n_steps, nbytes
+        raise ValueError(f"unknown op {op!r}")
+
+    raise ValueError(f"no stats model for transport {transport!r}")

@@ -1,0 +1,253 @@
+"""Cost-model autotuner: sweep the simulator, cache the winning plans.
+
+For each (operation, message size) on a topology the tuner scores every
+candidate :class:`Plan` — transport backend x chunk count x collective
+algorithm — by replaying its schedule through the link simulator under a
+:class:`~repro.netsim.model.LinkModel`, and records the argmin in a
+:class:`TuningTable`.  ``Communicator.plan()`` and the ``bcast``/``reduce``
+/``allreduce`` dispatchers in ``core/collectives.py`` consult the table by
+default, which is what finally turns PR 1's cost counters into decisions.
+
+The "static default" plan (static transport, 1 chunk, ring/chain schedule —
+exactly what the un-tuned code paths run) is always in the candidate set,
+so the tuner can never select a plan the simulator scores worse than it
+(asserted by ``tests/test_netsim.py``).
+
+Tables are cheap to build (pure-python simulation; milliseconds per cell)
+and cached per topology signature in-process; :meth:`TuningTable.save` /
+:meth:`TuningTable.load` persist them as JSON for offline reuse.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+from .model import LinkModel
+from .schedule import (
+    collective_rounds,
+    p2p_messages,
+    packet_bounds,
+    packet_n_packets,
+)
+from .sim import simulate, simulate_rounds
+
+#: the paper-evaluation sweep grid: 1 KiB .. 16 MiB
+SIZE_GRID = tuple(1 << p for p in range(10, 25, 2))
+
+N_CHUNKS_GRID = (1, 2, 4, 8, 16, 32)
+
+OPS = ("p2p", "bcast", "reduce", "allreduce")
+
+ALGOS = {
+    "p2p": ("routed",),
+    "bcast": ("ring", "tree", "staged"),
+    "reduce": ("ring", "tree", "staged"),
+    "allreduce": ("ring",),
+}
+
+PACKET_ELEMS = 32
+PACKET_R = 8
+
+
+@dataclass(frozen=True)
+class Plan:
+    """One tuned decision: which backend moves the bytes, how many chunks
+    ride the pipeline, and which schedule shape the collective uses."""
+
+    transport: str = "static"
+    n_chunks: int = 1
+    algo: str = "ring"
+
+    def clamp_chunks(self, leading_dim: int) -> int:
+        """Largest divisor of ``leading_dim`` <= the tuned chunk count (the
+        collectives require n_chunks | leading dim; the tuned value is a
+        hint, never a correctness constraint)."""
+        n = max(1, min(self.n_chunks, leading_dim))
+        while leading_dim % n:
+            n -= 1
+        return n
+
+    def to_dict(self):
+        return {"transport": self.transport, "n_chunks": self.n_chunks,
+                "algo": self.algo}
+
+
+DEFAULT_PLAN = Plan("static", 1, "ring")
+
+
+def score_plan(topo, rt, op: str, nbytes: int, plan: Plan,
+               model: LinkModel) -> float:
+    """Predicted seconds for ``op`` of ``nbytes`` under ``plan``.
+
+    Static/fused plans replay their schedule through the tick simulator;
+    packet plans use the router's static schedule bound (the same
+    ``_bounds`` the device path computes) times the per-packet cycle cost
+    including the R-stickiness arbitration factor (Tab. 4).
+    """
+    P = topo.n_ranks
+    if P == 1 or nbytes <= 0:
+        return 0.0
+    # score p2p at the topology's worst case: the farthest rank from 0
+    far = max(range(P), key=lambda d: rt.n_hops(0, d))
+
+    if plan.transport == "packet":
+        pkt_bytes = PACKET_ELEMS * 4
+        if op in ("p2p", "bcast", "reduce"):
+            # the packet backend drives the same logical schedule; cost it
+            # as the chain's per-link serialisation of the full message
+            pairs, n_rounds = [(0, far)], 1
+            per_sender = nbytes
+        else:  # allreduce: 2(P-1) identical ring permutes of nbytes/P
+            pairs, n_rounds = [(i, (i + 1) % P) for i in range(P)], 2 * (P - 1)
+            per_sender = nbytes / P
+        K = packet_n_packets(max(int(per_sender // 4), 1), PACKET_ELEMS)
+        n_steps, _ = packet_bounds(rt, pairs, K, pkt_elems=PACKET_ELEMS)
+        return n_rounds * n_steps * model.hop_time(pkt_bytes) * \
+            model.injection_cycles(PACKET_R)
+
+    # static / fused: replay the exact schedule
+    if op == "p2p":
+        rep = simulate(topo, rt, p2p_messages(rt, 0, far, nbytes,
+                                              plan.n_chunks))
+        return rep.time(model)
+    rounds = collective_rounds(topo, rt, op, plan.algo, nbytes,
+                               n_chunks=plan.n_chunks)
+    _, secs, _ = simulate_rounds(topo, rt, rounds, model=model)
+    return secs or 0.0
+
+
+@dataclass
+class TuningTable:
+    """op x size -> (best plan, its score, the static default's score)."""
+
+    topo_sig: str
+    model: LinkModel
+    entries: dict = field(default_factory=dict)  # (op, size) -> dict
+
+    def lookup(self, op: str, nbytes: int) -> Plan:
+        """Best plan for the nearest swept size (log-distance)."""
+        sizes = sorted({s for (o, s) in self.entries if o == op})
+        if not sizes:
+            return DEFAULT_PLAN
+        nbytes = max(int(nbytes), 1)
+        best = min(sizes, key=lambda s: abs(s.bit_length() - nbytes.bit_length()))
+        e = self.entries[(op, best)]
+        return Plan(e["transport"], e["n_chunks"], e["algo"])
+
+    def score(self, op: str, nbytes: int) -> float:
+        e = self.entries[(op, nbytes)]
+        return e["score"]
+
+    # -- persistence (the cached tuning-table format of DESIGN.md §6) ------
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "topo_sig": self.topo_sig,
+            "model": {
+                "hop_latency": self.model.hop_latency,
+                "link_bw": self.model.link_bw,
+                "injection_base": self.model.injection_base,
+                "switch_cycles": self.model.switch_cycles,
+            },
+            "entries": [
+                {"op": op, "nbytes": size, **e}
+                for (op, size), e in sorted(self.entries.items())
+            ],
+        }, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "TuningTable":
+        spec = json.loads(s)
+        t = TuningTable(spec["topo_sig"], LinkModel(**spec["model"]))
+        for e in spec["entries"]:
+            e = dict(e)
+            t.entries[(e.pop("op"), e.pop("nbytes"))] = e
+        return t
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @staticmethod
+    def load(path: str) -> "TuningTable":
+        with open(path) as f:
+            return TuningTable.from_json(f.read())
+
+
+def topo_signature(topo, rt=None) -> str:
+    """Cache key: the connection graph AND the route table — one topology
+    admits different route sets (DOR vs BFS tie-breaks), and plans scored
+    against one must not be served to a communicator using the other."""
+    sig = topo.to_json()
+    if rt is not None:
+        sig += "|" + rt.next_hop.tobytes().hex()
+    return sig
+
+
+def autotune(
+    topo, rt=None, *,
+    ops=OPS, sizes=SIZE_GRID, model: LinkModel | None = None,
+    transports=("static", "packet"), n_chunks_grid=N_CHUNKS_GRID,
+) -> TuningTable:
+    """Sweep plans over the (op x size) grid and record the winners."""
+    from ..core.routing import compute_route_table  # lazy: keep import light
+
+    if rt is None:
+        rt = compute_route_table(topo)
+    model = model or LinkModel.default_v5e()
+    table = TuningTable(topo_signature(topo, rt), model)
+    for op in ops:
+        algos = ALGOS[op]
+        for size in sizes:
+            best = None
+            default_score = None
+            for tname in transports:
+                for algo in algos:
+                    chunk_grid = n_chunks_grid
+                    if tname == "packet" or algo in ("tree", "staged") \
+                            or op == "allreduce":
+                        # whole-message rounds / router packetisation /
+                        # ring RS+AG: chunking cannot change the schedule
+                        chunk_grid = (1,)
+                    for nc in chunk_grid:
+                        plan = Plan(tname, nc, algo)
+                        s = score_plan(topo, rt, op, size, plan, model)
+                        if plan == DEFAULT_PLAN or (
+                            op == "p2p" and plan == Plan("static", 1, "routed")
+                        ):
+                            default_score = s
+                        if best is None or s < best[1]:
+                            best = (plan, s)
+            plan, s = best
+            assert default_score is not None, "default plan must be swept"
+            # invariant: argmin over a set containing the default
+            assert s <= default_score + 1e-18
+            table.entries[(op, size)] = {
+                **plan.to_dict(), "score": s, "static_score": default_score,
+            }
+    return table
+
+
+# ---------------------------------------------------------------------------
+# in-process table cache — what Communicator / the dispatchers consult
+# ---------------------------------------------------------------------------
+
+_TABLES: dict = {}
+
+
+def tuning_table_for(topo, rt=None, model: LinkModel | None = None) -> TuningTable:
+    sig = topo_signature(topo, rt)
+    if sig not in _TABLES:
+        _TABLES[sig] = autotune(topo, rt, model=model)
+    return _TABLES[sig]
+
+
+def tuned_plan(op: str, comm, nbytes: int) -> Plan:
+    """The table-backed decision point used by the core dispatchers."""
+    table = tuning_table_for(comm.topology, comm.route_table)
+    return table.lookup(op, nbytes)
+
+
+def clear_cache():
+    _TABLES.clear()

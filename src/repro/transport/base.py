@@ -43,6 +43,17 @@ class TransportStats:
     def add_overflow(self, ovf):
         self.overflow = ovf if self.overflow is None else self.overflow + ovf
 
+    def record(self, seconds: float, name: str = "") -> dict:
+        """One netsim calibration point: this schedule's trace-time cost
+        paired with its measured wall time (consumed by
+        :mod:`repro.netsim.calibrate`)."""
+        return {
+            "steps": int(self.steps),
+            "bytes": float(self.bytes_moved),
+            "seconds": float(seconds),
+            "name": name,
+        }
+
 
 def tree_bytes(x) -> int:
     """Static wire-byte count of a pytree (per rank, one step)."""

@@ -1,0 +1,389 @@
+"""netsim contract tests (DESIGN.md §6).
+
+Three pillars:
+
+* **exactness** — the simulator / stats predictor reproduces the *exact*
+  step and byte counters a real traced transport tallies, for the static
+  and packet backends, on the ring, the 2x4 torus and the snake-bus, with
+  zero packet loss;
+* **model sanity** — latency is nondecreasing in hops and effective
+  bandwidth is nonincreasing in chunk-count overhead (the paper's Tab. 3 /
+  Fig. 9 shapes), and contention/backpressure behave physically;
+* **autotuner invariant** — across the swept (topology x size) grid the
+  tuner never selects a plan the simulator scores worse than the static
+  default, and the tuned dispatchers stay bit-identical to the reference
+  schedules.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    Communicator,
+    Topology,
+    bcast,
+    make_test_mesh,
+    reduce,
+    stream_allgather,
+    stream_bcast,
+    stream_p2p,
+    stream_reduce,
+)
+from repro.core.router import snake_bus
+from repro.netsim import (
+    DEFAULT_PLAN,
+    LinkModel,
+    Message,
+    Plan,
+    TuningTable,
+    autotune,
+    collective_rounds,
+    p2p_messages,
+    predict_transport_stats,
+    score_plan,
+    simulate,
+    simulate_rounds,
+)
+from repro.transport import get_transport
+
+TOPOLOGIES = {
+    "ring": lambda: (
+        make_test_mesh((8,), ("x",)),
+        Communicator.create("x", (8,), topology=Topology.ring(8)),
+        P("x"),
+    ),
+    "torus": lambda: (
+        make_test_mesh((2, 4), ("x", "y")),
+        Communicator.create(("x", "y"), (2, 4)),
+        P(("x", "y")),
+    ),
+    "snake_bus": lambda: (
+        make_test_mesh((2, 4), ("x", "y")),
+        Communicator.create(("x", "y"), (2, 4), topology=snake_bus((2, 4))),
+        P(("x", "y")),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# exactness: simulator == TransportStats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("backend", ["static", "packet"])
+def test_sim_reproduces_transport_stats_p2p(topo, backend, devices8):
+    mesh, comm, spec = TOPOLOGIES[topo]()
+    shape, n_chunks, dst = (8, 16), 4, 5
+    x = jnp.asarray(np.random.RandomState(0).randn(8, *shape), jnp.float32)
+    t = get_transport(backend)
+
+    def fn(v):
+        y = stream_p2p(v[0], src=0, dst=dst, comm=comm, n_chunks=n_chunks,
+                       transport=t)
+        ovf = t.stats.overflow
+        if ovf is None:
+            ovf = jnp.zeros((), jnp.int32)
+        return y[None], ovf[None]
+
+    y, ovf = jax.jit(
+        jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=(spec, spec))
+    )(x)
+    assert int(np.asarray(ovf).sum()) == 0, "not a zero-loss run"
+    np.testing.assert_array_equal(np.asarray(y)[dst], np.asarray(x)[0])
+
+    steps, nbytes = predict_transport_stats(
+        comm, "p2p", shape=shape, src=0, dst=dst, n_chunks=n_chunks,
+        transport=backend,
+    )
+    assert t.stats.steps == steps, (
+        f"{backend}@{topo}: simulated steps {steps} != traced {t.stats.steps}"
+    )
+    assert t.stats.bytes_moved == nbytes, (
+        f"{backend}@{topo}: simulated bytes {nbytes} != "
+        f"traced {t.stats.bytes_moved}"
+    )
+    # the stats -> calibration hook carries exactly these counters
+    from repro.netsim import record_from_stats
+
+    rec = record_from_stats(t.stats, 1e-3, "probe")
+    assert rec["steps"] == steps and rec["bytes"] == nbytes
+    assert rec["seconds"] == 1e-3 and rec["name"] == "probe"
+
+
+@pytest.mark.parametrize("topo", ["ring"])
+def test_sim_reproduces_transport_stats_allgather(topo, devices8):
+    # ring only: on other topologies the simulator honestly charges the
+    # linearised shift's wrap/cross edges their multi-hop routed cost,
+    # while the static backend's trace-time counter is one step per
+    # ppermute regardless — p2p exactness covers those topologies above
+    mesh, comm, spec = TOPOLOGIES[topo]()
+    shape = (4, 8)
+    x = jnp.asarray(np.random.RandomState(1).randn(8, *shape), jnp.float32)
+    t = get_transport("static")
+
+    def fn(v):
+        return stream_allgather(v[0], comm, transport=t)[None]
+
+    jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec))(x)
+    steps, nbytes = predict_transport_stats(
+        comm, "allgather", shape=shape, transport="static"
+    )
+    assert t.stats.steps == steps
+    assert t.stats.bytes_moved == nbytes
+
+
+def test_sim_reproduces_transport_stats_packet_shift(devices8):
+    mesh, comm, spec = TOPOLOGIES["ring"]()
+    shape = (8, 8)
+    x = jnp.asarray(np.random.RandomState(2).randn(8, *shape), jnp.float32)
+    t = get_transport("packet")
+
+    def fn(v):
+        y = t.shift(v[0], comm)
+        return y[None], t.stats.overflow[None]
+
+    _, ovf = jax.jit(
+        jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=(spec, spec))
+    )(x)
+    assert int(np.asarray(ovf).sum()) == 0
+    steps, nbytes = predict_transport_stats(
+        comm, "shift", shape=shape, transport="packet"
+    )
+    assert t.stats.steps == steps
+    assert t.stats.bytes_moved == nbytes
+
+
+# ---------------------------------------------------------------------------
+# simulator mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_ticks_and_byte_hops():
+    topo = Topology.bus(8)
+    from repro.core.routing import compute_route_table
+
+    rt = compute_route_table(topo)
+    for n_chunks in (1, 2, 8):
+        for dst in (1, 4, 7):
+            hops = rt.n_hops(0, dst)
+            rep = simulate(topo, rt, p2p_messages(rt, 0, dst, 4096.0, n_chunks))
+            assert rep.ticks == n_chunks + hops - 1
+            assert rep.byte_hops == pytest.approx(4096.0 * hops)
+            # a smoothly pipelining single flow parks at most the one
+            # in-flight flit per hop (the paper's 1-deep pipe register)
+            assert rep.congestion() <= 1
+
+
+def test_contention_queues_and_backpressure():
+    topo = Topology.bus(8)
+    from repro.core.routing import compute_route_table
+
+    rt = compute_route_table(topo)
+    msgs = [
+        Message(0, 4, n_flits=6, flit_bytes=64.0),
+        Message(1, 4, n_flits=6, flit_bytes=64.0),
+    ]
+    solo = simulate(topo, rt, msgs[:1])
+    both = simulate(topo, rt, msgs)
+    assert both.ticks > solo.ticks          # shared links serialize
+    assert both.ticks >= 12                 # bottleneck link moves 12 flits
+    assert both.congestion() >= 1           # flits parked in transit
+    tight = simulate(topo, rt, msgs, fifo_depth=1)
+    assert tight.stalls > 0                 # backpressure engaged
+    assert tight.ticks >= both.ticks        # and it can't be faster
+    # occupancy: the shared edge (1, 2) carries both flows' flits
+    assert both.link_busy[(1, 2)] == 12
+
+
+def test_sticky_arbitration_and_switch_bubble():
+    topo = Topology.bus(4)
+    from repro.core.routing import compute_route_table
+
+    rt = compute_route_table(topo)
+    msgs = [
+        Message(0, 3, n_flits=8, flit_bytes=32.0, port=0, pipelined=False),
+        Message(0, 3, n_flits=8, flit_bytes=32.0, port=1, pipelined=False),
+    ]
+    free = simulate(topo, rt, msgs)
+    r1 = simulate(topo, rt, msgs, R=1, switch_bubble=True)
+    r16 = simulate(topo, rt, msgs, R=16, switch_bubble=True)
+    # R=1 alternates sources every cycle and pays the bubble each time;
+    # R=16 latches one FIFO and drains it — the paper's Tab. 4 trade-off
+    assert r1.ticks > r16.ticks >= free.ticks
+
+
+def test_model_monotonicity():
+    m = LinkModel.default_v5e()
+    # Tab. 3: latency nondecreasing in hops
+    for nbytes in (1 << 10, 1 << 24):
+        for n_chunks in (1, 8):
+            times = [m.p2p_time(nbytes, h, n_chunks) for h in range(1, 9)]
+            assert all(b >= a for a, b in zip(times, times[1:]))
+    # chunk-count overhead: in the latency-bound regime every extra chunk
+    # adds a tick, so effective bandwidth is nonincreasing in n_chunks
+    bw = [m.bandwidth(1 << 10, 4, n) for n in (1, 2, 4, 8, 16, 32)]
+    assert all(b <= a for a, b in zip(bw, bw[1:]))
+    # and no chunking choice may beat the pure serialization bound
+    for n in (1, 2, 4, 8, 16, 32):
+        assert m.p2p_time(1 << 24, 4, n) >= m.serialization(1 << 24)
+    # Tab. 4: injection cost falls with stickiness R
+    cyc = [m.injection_cycles(R) for R in (1, 4, 8, 16)]
+    assert all(b <= a for a, b in zip(cyc, cyc[1:]))
+    assert cyc[0] > 1.0
+
+
+def test_calibration_recovers_model():
+    true = LinkModel(hop_latency=2e-6, link_bw=10e9, injection_base=5e-6)
+    recs = []
+    rng = np.random.RandomState(0)
+    for steps, nbytes in [(1, 32), (4, 1 << 12), (7, 1 << 16), (19, 1 << 20)]:
+        t = true.predict({"steps": steps, "bytes": nbytes})
+        recs.append({"steps": steps, "bytes": float(nbytes),
+                     "seconds": t * (1 + 0.05 * rng.randn())})
+    fitted = LinkModel.fit(recs)
+    for r in recs:
+        ratio = fitted.predict(r) / true.predict(r)
+        assert 0.5 < ratio < 2.0
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+
+TUNE_TOPOS = {
+    "ring8": lambda: Topology.ring(8),
+    "torus2x4": lambda: Topology.torus((2, 4)),
+    "snake_bus": lambda: snake_bus((2, 4)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(TUNE_TOPOS))
+def test_autotuner_never_worse_than_static_default(name):
+    """Acceptance invariant: across topology in {ring(8), torus(2,4),
+    snake-bus} x size in {1KiB..16MiB}, the tuned plan's simulator score is
+    never worse than the static default's."""
+    topo = TUNE_TOPOS[name]()
+    from repro.core.routing import compute_route_table
+
+    rt = compute_route_table(topo)
+    table = autotune(topo, rt)
+    model = table.model
+    for (op, size), e in table.entries.items():
+        assert e["score"] <= e["static_score"] + 1e-18, (op, size, e)
+        # re-score independently: the recorded numbers are reproducible
+        plan = Plan(e["transport"], e["n_chunks"], e["algo"])
+        assert score_plan(topo, rt, op, size, plan, model) == \
+            pytest.approx(e["score"])
+        default = DEFAULT_PLAN if op != "p2p" else Plan("static", 1, "routed")
+        assert score_plan(topo, rt, op, size, default, model) == \
+            pytest.approx(e["static_score"])
+
+
+def test_autotuner_prefers_chunked_pipeline_for_large_messages():
+    topo = Topology.ring(8)
+    table = autotune(topo)
+    small = table.lookup("bcast", 1 << 10)
+    large = table.lookup("bcast", 16 << 20)
+    assert small.n_chunks <= large.n_chunks
+    assert large.n_chunks > 1  # pipelining must win when serialization-bound
+    assert large.transport == "static"
+
+
+def test_tuning_table_json_roundtrip(tmp_path):
+    table = autotune(Topology.ring(8), sizes=(1 << 10, 1 << 20))
+    p = tmp_path / "tuning.json"
+    table.save(str(p))
+    back = TuningTable.load(str(p))
+    assert back.topo_sig == table.topo_sig
+    assert back.entries == table.entries
+    assert back.lookup("p2p", 1 << 19).to_dict() == \
+        table.lookup("p2p", 1 << 19).to_dict()
+
+
+def test_tuned_dispatchers_bit_identical(devices8):
+    """bcast()/reduce() with the tuned plan produce exactly what the
+    reference schedules produce (plans change cost, never values)."""
+    mesh, comm, spec = TOPOLOGIES["ring"]()
+    x = jnp.asarray(np.random.RandomState(3).randn(8, 16, 4), jnp.float32)
+
+    def tuned(v):
+        return bcast(v[0], comm, root=0)[None], \
+            reduce(v[0], comm, root=0)[None]
+
+    def ref(v):
+        return stream_bcast(v[0], comm, root=0)[None], \
+            stream_reduce(v[0], comm, root=0)[None]
+
+    got = jax.jit(jax.shard_map(
+        tuned, mesh=mesh, in_specs=spec, out_specs=(spec, spec)))(x)
+    want = jax.jit(jax.shard_map(
+        ref, mesh=mesh, in_specs=spec, out_specs=(spec, spec)))(x)
+    for g, w, nm in zip(got, want, ["bcast", "reduce"]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-6, atol=1e-6,
+            err_msg=f"tuned {nm} diverged from reference")
+
+
+def test_stream_p2p_auto_plan(devices8):
+    mesh, comm, spec = TOPOLOGIES["snake_bus"]()
+    x = jnp.asarray(np.random.RandomState(4).randn(8, 16, 4), jnp.float32)
+
+    def fn(v):
+        return stream_p2p(v[0], src=0, dst=5, comm=comm, plan="auto")[None]
+
+    y = np.asarray(jax.jit(
+        jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec))(x))
+    want = np.zeros_like(np.asarray(x))
+    want[5] = np.asarray(x)[0]
+    np.testing.assert_array_equal(y, want)
+
+
+def test_communicator_plan_cached():
+    comm = Communicator.create("x", (8,), topology=Topology.ring(8))
+    p1 = comm.plan("allreduce", 1 << 20)
+    p2 = comm.plan("allreduce", 1 << 20)
+    assert p1 == p2
+    assert isinstance(p1, Plan)
+
+
+def test_tuning_cache_distinguishes_route_tables():
+    """Same topology, different routing scheme -> different cache entries
+    (plans are scored against routes, not just the connection graph)."""
+    from repro.netsim.tune import tuning_table_for
+
+    dor = Communicator.create("x", (8,))
+    bfs = Communicator.create("x", (8,), routing_scheme="bfs")
+    t_dor = tuning_table_for(dor.topology, dor.route_table)
+    t_bfs = tuning_table_for(bfs.topology, bfs.route_table)
+    assert t_dor.topo_sig != t_bfs.topo_sig
+    assert t_dor is tuning_table_for(dor.topology, dor.route_table)  # cached
+
+
+# ---------------------------------------------------------------------------
+# collective schedule shapes (tick counts mirror core/collectives.py)
+# ---------------------------------------------------------------------------
+
+
+def test_collective_round_tick_counts():
+    topo = Topology.ring(8)
+    from repro.core.routing import compute_route_table
+
+    rt = compute_route_table(topo)
+    # chain bcast: n_chunks + P - 2 (the stream_bcast step count)
+    for nc in (1, 4, 16):
+        ticks, _, _ = simulate_rounds(
+            topo, rt, collective_rounds(topo, rt, "bcast", "ring", 4096.0,
+                                        n_chunks=nc))
+        assert ticks == nc + 8 - 2
+    # ring allreduce: 2(P-1) single-tick permute rounds
+    ticks, _, _ = simulate_rounds(
+        topo, rt, collective_rounds(topo, rt, "allreduce", "ring", 4096.0))
+    assert ticks == 2 * 7
+    # binomial tree: ceil(log2 P) rounds, each >= 1 tick
+    rounds = collective_rounds(topo, rt, "bcast", "tree", 4096.0)
+    assert len(rounds) == 3

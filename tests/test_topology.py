@@ -1,0 +1,93 @@
+"""Topology serialization + graph queries on irregular `from_edges` graphs.
+
+The paper's route generator consumes JSON topology descriptions; these
+tests pin the untested edge of ``core/topology.py``: the
+``to_json``/``from_json`` roundtrip, ``diameter`` and ``is_connected`` on
+graphs that are neither tori nor buses.
+"""
+
+import json
+
+import pytest
+
+from repro.core import Topology
+
+# an irregular connected graph: a star (0-1..0-4) with a tail 4-5-6
+IRREGULAR_EDGES = [(0, 1), (0, 2), (0, 3), (0, 4), (4, 5), (5, 6)]
+
+
+def test_to_json_from_json_roundtrip():
+    topo = Topology.from_edges(7, IRREGULAR_EDGES, name="star_tail")
+    s = topo.to_json()
+    spec = json.loads(s)
+    assert spec["n_ranks"] == 7
+    assert spec["name"] == "star_tail"
+    assert sorted(tuple(e) for e in spec["edges"]) == sorted(IRREGULAR_EDGES)
+
+    back = Topology.from_json(s)
+    assert back.n_ranks == topo.n_ranks
+    assert back.name == topo.name
+    # adjacency *sets* survive (neighbour order is construction order and
+    # may legitimately differ after the sorted-edge serialisation)
+    for r in range(7):
+        assert set(back.links[r]) == set(topo.links[r])
+    # the serialisation is a fixed point
+    assert Topology.from_json(back.to_json()).to_json() == back.to_json()
+
+
+def test_from_json_accepts_file(tmp_path):
+    topo = Topology.from_edges(4, [(0, 1), (1, 2), (2, 3)], name="p4")
+    p = tmp_path / "topo.json"
+    p.write_text(topo.to_json())
+    back = Topology.from_json(str(p))
+    assert back.n_ranks == 4 and back.name == "p4"
+    assert back.diameter() == 3
+
+
+def test_roundtrip_drops_torus_coords_but_keeps_routes_working():
+    """dims (DOR coordinates) are not serialised; a roundtripped torus must
+    still route (BFS fallback) and keep its metric structure."""
+    from repro.core import compute_route_table
+
+    torus = Topology.torus((2, 4))
+    back = Topology.from_json(torus.to_json())
+    assert back.dims is None
+    assert back.diameter() == torus.diameter()
+    rt = compute_route_table(back)  # auto -> bfs on dims=None
+    for s in range(8):
+        for d in range(8):
+            assert rt.n_hops(s, d) <= back.diameter()
+
+
+def test_diameter_irregular():
+    topo = Topology.from_edges(7, IRREGULAR_EDGES)
+    # farthest pair: tail end 6 to any other star leaf (6-5-4-0-1) = 4
+    assert topo.diameter() == 4
+    assert Topology.ring(8).diameter() == 4
+    assert Topology.bus(8).diameter() == 7
+
+
+def test_is_connected():
+    assert Topology.from_edges(7, IRREGULAR_EDGES).is_connected()
+    # two components: triangle + isolated edge
+    split = Topology.from_edges(5, [(0, 1), (1, 2), (2, 0), (3, 4)])
+    assert not split.is_connected()
+    # a lone rank with no links at all
+    assert not Topology.from_edges(2, []).is_connected()
+    assert Topology.from_edges(1, []).is_connected()
+
+
+def test_degree_and_ports_on_irregular_graph():
+    topo = Topology.from_edges(7, IRREGULAR_EDGES)
+    assert topo.degree(0) == 4
+    assert topo.degree(6) == 1
+    for r in range(7):
+        for i, n in enumerate(topo.neighbors(r)):
+            assert topo.port_of(r, n) == i
+
+
+def test_from_edges_validates_symmetry_and_bounds():
+    with pytest.raises(AssertionError):
+        Topology(2, ((1,), ()))  # asymmetric link
+    with pytest.raises((AssertionError, IndexError)):
+        Topology.from_edges(2, [(0, 5)])  # out-of-range neighbour
