@@ -33,12 +33,20 @@ from repro.core import (
     tree_bcast,
     tree_reduce,
 )
-from .common import ICI_BW, csv_row, make_bench_transport, timeit
+from .common import (
+    ICI_BW,
+    V5E_MODEL,
+    csv_row,
+    make_bench_transport,
+    timeit,
+    wire_of,
+)
 
 PP = 8
 
 
-def run(transports=("static", "packet", "fused"), sizes=(4, 8, 11)):
+def run(transports=("static", "packet", "fused", "compressed"),
+        sizes=(4, 8, 11)):
     mesh = make_test_mesh((PP,), ("x",))
     comms = {
         "torus": Communicator.create("x", (PP,)),
@@ -68,7 +76,11 @@ def run(transports=("static", "packet", "fused"), sizes=(4, 8, 11)):
                 t = timeit(f, x)
                 if name.startswith("smi"):
                     steps = n_chunks + PP - 2
-                    model = steps * (elems * 4 / n_chunks) / ICI_BW
+                    # wire-aware: a compressed link serializes the int8
+                    # payload + scale sidecar and pays the per-hop codec
+                    wire = wire_of(name[4:-1])
+                    model = steps * V5E_MODEL.hop_time_wire(
+                        elems * 4 / n_chunks, wire)
                 elif name == "staged":
                     model = sum(
                         comm.route_table.n_hops(0, d) for d in range(1, PP)

@@ -68,7 +68,9 @@ def make_bench_transport(name, *, pkt_elems=2048):
     """Backend instance for a --transport sweep: packet gets a
     benchmark-sized payload (the 28 B packet of §4.2 scaled so a chunk is a
     few dozen packets); fused runs through the Pallas interpreter off-TPU
-    so the fused code path is what gets timed."""
+    so the fused code path is what gets timed; ``compressed`` (and
+    ``compressed:<inner>`` forms) resolve through the registry's wrapper
+    syntax."""
     from repro.transport import get_transport
 
     if name == "packet":
@@ -76,3 +78,9 @@ def make_bench_transport(name, *, pkt_elems=2048):
     if name == "fused":
         return get_transport(name, interpret=jax.default_backend() != "tpu")
     return get_transport(name)
+
+
+def wire_of(transport_name: str) -> str:
+    """Wire format of a --transport sweep entry, for model columns."""
+    return "int8" if transport_name.partition(":")[0] == "compressed" \
+        else "raw"

@@ -90,6 +90,21 @@ def main():
     plan = comm.plan("bcast", msg[SRC].size * 4)
     print(f"autotuned bcast ✓ (netsim chose {plan})")
 
+    # ---- compressed links: comm_mode="smi:compressed" -------------------
+    # The same collective call sites run over the int8 compressed-link
+    # backend (blockwise scales + error feedback, DESIGN.md §7): models
+    # select it with comm_mode="smi:compressed"; here the communicator's
+    # transport string does the same for a bare collective.
+    ccomm = comm.with_transport("compressed")
+    out = jax.jit(jax.shard_map(
+        lambda v: stream_bcast(v[0], ccomm, root=SRC, n_chunks=4)[None],
+        mesh=mesh, in_specs=P("x"), out_specs=P("x")))(msg)
+    bound = float(np.max(np.abs(np.asarray(msg[SRC])))) / 254 * 1.05
+    for r in range(8):
+        np.testing.assert_allclose(np.asarray(out[r]), np.asarray(msg[SRC]),
+                                   atol=bound)
+    print("compressed-link broadcast ✓ (int8 wire, within codec bound)")
+
 
 if __name__ == "__main__":
     main()

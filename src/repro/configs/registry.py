@@ -95,8 +95,11 @@ ARCHS: dict[str, ModelConfig] = {
 
 #: valid ``comm_mode`` strings across launch/dry-run/benchmarks.  The
 #: ``smi:<backend>`` forms select the transport backend moving the bytes
-#: (repro/transport registry); bare ``"smi"`` means ``smi:static``.
-TRANSPORT_BACKENDS: tuple[str, ...] = ("static", "packet", "fused")
+#: (repro/transport registry); bare ``"smi"`` means ``smi:static``;
+#: ``"smi:compressed"`` runs int8 compressed links over the static
+#: schedules (``compressed:<inner>`` composes with any backend).
+TRANSPORT_BACKENDS: tuple[str, ...] = ("static", "packet", "fused",
+                                       "compressed")
 COMM_MODES: tuple[str, ...] = (
     "smi",
     *(f"smi:{b}" for b in TRANSPORT_BACKENDS),

@@ -29,6 +29,7 @@ Pallas path.
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Callable
 
@@ -46,6 +47,28 @@ def _resolve(transport, comm: Communicator):
     return resolve_transport(transport, comm)
 
 
+def _codec_shim(t, quantize, dequantize):
+    """Deprecated-kwargs migration: wrap the resolved transport in a
+    :class:`~repro.transport.compressed.CompressedTransport` carrying the
+    caller's codec, so the legacy ``quantize=``/``dequantize=`` path runs
+    the same error-feedback wire as ``transport="compressed"``."""
+    warnings.warn(
+        "quantize=/dequantize= kwargs are deprecated; pass "
+        "transport='compressed' (or 'compressed:<inner>') instead — the "
+        "compressed transport carries blockwise int8 scales, per-hop error "
+        "feedback and byte-accurate wire stats (DESIGN.md §7)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    from ..transport.compressed import CompressedTransport
+
+    return CompressedTransport(inner=t, codec=(quantize, dequantize))
+
+
+def _is_lossy(t) -> bool:
+    return bool(getattr(t, "lossy_wire", False))
+
+
 def _shift(x, comm: Communicator, step: int = 1, transport=None):
     return _resolve(transport, comm).shift(x, comm, step)
 
@@ -57,7 +80,15 @@ def _schedule_loop(tp, steps: int, body, carry):
 
     Rolled tracing executes ``body`` once, so the backend's trace-time
     step/byte counters would record a single iteration; the per-iteration
-    delta is scaled to the full step count afterwards.
+    delta is scaled to the full step count afterwards.  That scaling is
+    exact only because every schedule here moves the *same wire bytes each
+    step*: the chain pipelines carry one fixed-size chunk per tick
+    (``csz`` never varies with ``t``), and wire formats (the compressed
+    backend's int8 payload + sidecar) are a pure function of that chunk
+    shape.  A future schedule with per-step-varying payloads must not use
+    the rolled path — unroll it (or account explicitly, as
+    ``static.p2p`` does).  ``tests/test_compressed.py`` asserts rolled ==
+    unrolled stats for the chunked chain on both raw and compressed wires.
     """
     if getattr(tp, "runtime_stats", False):
         for t in range(steps):
@@ -155,8 +186,18 @@ def stream_reduce_scatter(
     matmul+reduce-scatter fusion (communication during computation, the
     paper's core idea applied to a collective).
 
-    ``quantize``/``dequantize`` optionally compress the wire traffic
-    (gradient compression; pairs with error feedback at the caller).
+    Wire compression is a transport concern: pass
+    ``transport="compressed"`` (or a :class:`~repro.transport.compressed.
+    CompressedTransport` instance).  A lossy wire switches the schedule to
+    the *once-quantised contribution* form (DESIGN.md §7): round ``s``
+    quantises each rank's contribution for block ``(r+s) % P`` exactly
+    once — with the transport's error-feedback residual — and ships it
+    straight to its home rank with a distance-``s`` ring permute; partial
+    sums accumulate in f32 and never re-round, so quantisation error is
+    bounded independent of P (the old quantize-the-accumulator branch
+    compounded error once per hop).  The legacy ``quantize``/
+    ``dequantize`` kwargs are deprecated shims that wrap the resolved
+    transport in exactly that backend.
 
     The uncompressed inner step is the transport's ``shift_accumulate``
     hot path (Pallas-fused on the ``fused`` backend).
@@ -164,6 +205,8 @@ def stream_reduce_scatter(
     P = comm.size
     r = comm.rank()
     t = _resolve(transport, comm)
+    if quantize is not None:
+        t = _codec_shim(t, quantize, dequantize)
     if compute_chunk is None:
         m = x.shape[0] // P
         xb = x.reshape((P, m) + x.shape[1:])
@@ -171,16 +214,24 @@ def stream_reduce_scatter(
         def compute_chunk(i):
             return jax.lax.dynamic_index_in_dim(xb, i, 0, keepdims=False)
 
+    if _is_lossy(t):
+        own = compute_chunk(r)
+        if P == 1:
+            return own
+        acc = own.astype(jnp.float32)
+        for s in range(1, P):
+            # contribution for block (r+s)%P, arriving at its home rank
+            acc = acc + t.send_contribution(
+                compute_chunk((r + s) % P), comm, +s
+            )
+        return acc.astype(own.dtype)
+
     acc = compute_chunk((r - 1) % P)
     if P == 1:
         return acc
     for s in range(1, P):
         blk = (r - s - 1) % P
-        if quantize is None:
-            acc = t.shift_accumulate(acc, compute_chunk(blk), comm, +1)
-        else:
-            wire = t.shift(quantize(acc), comm, +1)
-            acc = dequantize(wire) + compute_chunk(blk)
+        acc = t.shift_accumulate(acc, compute_chunk(blk), comm, +1)
     return acc
 
 
@@ -193,20 +244,36 @@ def stream_allreduce(
     bidir: bool = False,
     transport=None,
 ):
-    """Ring all-reduce (RS + AG) of an arbitrary-shaped array."""
+    """Ring all-reduce (RS + AG) of an arbitrary-shaped array.
+
+    A lossy wire (``transport="compressed"`` or the deprecated
+    ``quantize=`` kwargs) requires a floating dtype: the quantized path
+    produces approximate floats, and the trailing restore-cast to the
+    input dtype would silently truncate integer payloads (the old code
+    did exactly that).
+    """
     P = comm.size
     if P == 1:
         return x
     shape, dtype = x.shape, x.dtype
+    t = _resolve(transport, comm)
+    rs_t = t if quantize is None else _codec_shim(t, quantize, dequantize)
+    if (_is_lossy(rs_t)) and not jnp.issubdtype(dtype, jnp.floating):
+        raise TypeError(
+            f"compressed/quantized all-reduce of {dtype} payload: the lossy "
+            "wire yields approximate floats and casting back would silently "
+            "corrupt integer data; use a raw transport for integer reduces"
+        )
     flat = x.reshape(-1)
     orig = flat.shape[0]
     pad = (-orig) % P
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    red = stream_reduce_scatter(
-        flat, comm, quantize=quantize, dequantize=dequantize, transport=transport
-    )
-    full = stream_allgather(red, comm, bidir=bidir, transport=transport)
+    # legacy shim semantics: compress the reduce-scatter wire only (the
+    # allgather phase ran raw before); transport="compressed" proper
+    # compresses both phases
+    red = stream_reduce_scatter(flat, comm, transport=rs_t)
+    full = stream_allgather(red, comm, bidir=bidir, transport=t)
     if pad:
         full = full[:orig]
     return full.reshape(shape).astype(dtype)
@@ -451,25 +518,37 @@ def _resolve_plan(plan, op: str, comm: Communicator, x):
 
     ``"auto"`` consults the communicator's cached tuning table for the
     message's byte size; ``None`` is the static default; a
-    :class:`repro.netsim.tune.Plan` passes through."""
+    :class:`repro.netsim.tune.Plan` passes through.  A tuned ``int8``-wire
+    plan only applies to floating payloads — integer data must move
+    exactly, so it silently falls back to the same plan on the raw wire
+    (the tuner's wire choice is a cost hint, never a correctness gate)."""
+    import dataclasses
+
     from ..netsim.tune import DEFAULT_PLAN, Plan
 
     if plan is None:
         return DEFAULT_PLAN
     if isinstance(plan, Plan):
-        return plan
-    assert plan == "auto", f"plan must be 'auto', None or a Plan; got {plan!r}"
-    return comm.plan(op, int(x.size) * x.dtype.itemsize)
+        p = plan
+    else:
+        assert plan == "auto", \
+            f"plan must be 'auto', None or a Plan; got {plan!r}"
+        p = comm.plan(op, int(x.size) * x.dtype.itemsize)
+    if p.wire != "raw" and not jnp.issubdtype(x.dtype, jnp.floating):
+        p = dataclasses.replace(p, wire="raw")
+    return p
 
 
 def bcast(x: jax.Array, comm: Communicator, *, root: int = 0,
           plan="auto", transport=None):
     """Autotuned broadcast: the netsim tuning table picks the schedule
-    (pipelined chain / binomial tree / staged), the chunk count and the
-    transport backend for this topology and message size.  ``transport``
-    overrides the tuned backend; ``plan=None`` forces the static default."""
+    (pipelined chain / binomial tree / staged), the chunk count, the
+    transport backend and the wire format (a bandwidth-bound plan may
+    select a compressed link — results then match within the codec error
+    bound) for this topology and message size.  ``transport`` overrides
+    the tuned backend; ``plan=None`` forces the static default."""
     p = _resolve_plan(plan, "bcast", comm, x)
-    tp = transport if transport is not None else p.transport
+    tp = transport if transport is not None else p.transport_key
     if p.algo == "tree":
         return tree_bcast(x, comm, root=root, transport=tp)
     if p.algo == "staged":
@@ -482,7 +561,7 @@ def reduce(x: jax.Array, comm: Communicator, *, root: int = 0, op=jnp.add,
            plan="auto", transport=None):
     """Autotuned rooted reduction (same dispatch rules as :func:`bcast`)."""
     p = _resolve_plan(plan, "reduce", comm, x)
-    tp = transport if transport is not None else p.transport
+    tp = transport if transport is not None else p.transport_key
     if p.algo == "tree":
         return tree_reduce(x, comm, root=root, op=op, transport=tp)
     if p.algo == "staged":
@@ -497,7 +576,7 @@ def allreduce(x: jax.Array, comm: Communicator, *, plan="auto",
     the RS+AG schedule fixes its own chunking (nbytes/P blocks), so the
     tuner sweeps no chunk grid for this op and ``plan.n_chunks`` is moot."""
     p = _resolve_plan(plan, "allreduce", comm, x)
-    tp = transport if transport is not None else p.transport
+    tp = transport if transport is not None else p.transport_key
     return stream_allreduce(x, comm, transport=tp, **kw)
 
 
@@ -547,15 +626,26 @@ def staged_reduce(x, comm: Communicator, *, root: int = 0, op=jnp.add, transport
 
 
 def make_int8_codec(axis_elems: int | None = None):
-    """Per-tensor-scale int8 quantization codec for compressed rings."""
+    """int8 quantization codec for compressed rings.
+
+    ``axis_elems`` sets the scale-block size: one f32 scale per
+    ``axis_elems`` flattened payload elements (``None`` = a single
+    per-tensor scale — the historic behaviour, which used to be the *only*
+    behaviour because the parameter was silently ignored).  Blockwise
+    scales localise the quantisation step to each block's own magnitude,
+    which is what makes heterogeneous-magnitude tensors (gradients)
+    survive int8 wires.
+
+    Prefer ``transport="compressed"`` for new code — same codec, plus
+    per-hop error feedback and byte-accurate wire stats; this factory
+    remains the explicit-codec hook for the deprecated kwargs path.
+    """
+    from ..transport.compressed import dequantize_int8, quantize_int8
 
     def quantize(v):
-        scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-8) / 127.0
-        q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
-        return q, scale.astype(jnp.float32)
+        return quantize_int8(v, axis_elems)
 
     def dequantize(wire):
-        q, scale = wire
-        return q.astype(jnp.float32) * scale
+        return dequantize_int8(wire, axis_elems)
 
     return quantize, dequantize

@@ -97,8 +97,13 @@ def stream_p2p(
             )
             nbytes = x.size * x.dtype.itemsize
             plan = comm.plan("p2p", int(nbytes))
+        if plan.wire != "raw" and not jnp.issubdtype(x.dtype, jnp.floating):
+            # integer payloads must move exactly: same plan, raw wire
+            import dataclasses
+
+            plan = dataclasses.replace(plan, wire="raw")
         if transport is None:
-            transport = plan.transport
+            transport = plan.transport_key
         n_chunks = plan.clamp_chunks(x.shape[0])
 
     return resolve_transport(transport, comm).p2p(

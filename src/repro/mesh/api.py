@@ -8,6 +8,9 @@ Models are written once against these helpers; the context selects
   ``"smi:static"`` (trace-time ppermute schedules, the default),
   ``"smi:packet"`` (the dynamic packet-switched router end to end),
   ``"smi:fused"`` (Pallas-fused shift+accumulate on TPU),
+  ``"smi:compressed"`` (int8 compressed links with blockwise scales and
+  per-hop error feedback; ``"smi:compressed:<inner>"`` picks the wrapped
+  backend),
 * ``comm_mode="bulk"`` — XLA bulk collectives (lax.all_gather / psum_scatter)
   — the "host-orchestrated bulk transfer" baseline of the paper's
   comparisons, and the fallback fast path,
@@ -208,12 +211,22 @@ def ring_attention(q, k, v, ctx: ParallelCtx, **kw):
 # ----------------------------------------------------------- grad sync (DP)
 
 
+def _compressed_key(ctx: ParallelCtx) -> str:
+    """Transport key for int8-compressed gradient rings: wrap the context's
+    backend in the compressed-link transport (idempotent when the context
+    already names a compressed backend)."""
+    t = ctx.transport
+    return t if t.partition(":")[0] == "compressed" else f"compressed:{t}"
+
+
 def grad_sync(grads, ctx: ParallelCtx, *, compressed: bool = False):
     """Data-parallel gradient mean over the batch axes.
 
-    smi mode: streamed ring all-reduce per tensor (optionally int8 wire
-    compression — error feedback handled by the optimizer).
-    bulk mode: lax.psum.
+    smi mode: streamed ring all-reduce per tensor; ``compressed=True``
+    runs each ring over the int8 compressed-link transport (blockwise
+    scales + per-hop error feedback inside the reduce-scatter; end-to-end
+    residual feedback stays with the optimizer's
+    :class:`~repro.optim.grad.ErrorFeedback`).  bulk mode: lax.psum.
     """
     if not ctx.batch_axes:
         return grads
@@ -225,11 +238,15 @@ def grad_sync(grads, ctx: ParallelCtx, *, compressed: bool = False):
     if ctx.is_smi:
         comm = _dp_comm(ctx)
         if compressed:
-            from ..core.collectives import make_int8_codec
+            from ..transport import get_transport
 
-            q, dq = make_int8_codec()
+            key = _compressed_key(ctx)
+            # fresh instance per tensor: error-feedback residuals must not
+            # bleed between tensors of one sync
             return jax.tree.map(
-                lambda g: stream_allreduce(g, comm, quantize=q, dequantize=dq) / n, grads
+                lambda g: stream_allreduce(
+                    g, comm, transport=get_transport(key)) / n,
+                grads,
             )
         return jax.tree.map(lambda g: stream_allreduce(g, comm) / n, grads)
     return jax.tree.map(lambda g: lax.pmean(g, ctx.batch_axes), grads)
@@ -330,19 +347,17 @@ def grad_sync_fsdp(grads, fsdp_plan, ctx: ParallelCtx, *, compressed=False):
     for a in ctx.batch_axes:
         dp *= sizes[a]
     comm = _dp_comm(ctx) if ctx.is_smi else None
-    q = dq = None
-    if compressed:
-        from ..core.collectives import make_int8_codec
-
-        q, dq = make_int8_codec()
+    tkey = _compressed_key(ctx) if compressed else None
 
     def one(g, dim):
         if dim >= 0:
             return g / dp
         if ctx.is_smi:
             from ..core.collectives import stream_allreduce
+            from ..transport import get_transport
 
-            return stream_allreduce(g, comm, quantize=q, dequantize=dq) / dp
+            t = get_transport(tkey) if tkey is not None else None
+            return stream_allreduce(g, comm, transport=t) / dp
         return lax.pmean(g, ctx.batch_axes)
 
     return jax.tree.map(one, grads, fsdp_plan)

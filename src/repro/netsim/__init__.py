@@ -19,10 +19,11 @@ vs frame size (Fig. 9).  This subsystem is that model made *executable*:
 See DESIGN.md §6 for the subsystem contract.
 """
 
-from .model import LinkModel
+from .model import LinkModel, WIRE_AXIS_ELEMS, int8_wire_nbytes
 from .sim import Message, SimReport, simulate, simulate_rounds
 from .schedule import (
     collective_rounds,
+    compressed_reduce_scatter_rounds,
     p2p_messages,
     packet_bounds,
     packet_n_packets,
@@ -34,6 +35,7 @@ from .tune import (
     DEFAULT_PLAN,
     Plan,
     SIZE_GRID,
+    WIRES,
     TuningTable,
     autotune,
     score_plan,
@@ -43,11 +45,14 @@ from .tune import (
 
 __all__ = [
     "LinkModel",
+    "WIRE_AXIS_ELEMS",
+    "int8_wire_nbytes",
     "Message",
     "SimReport",
     "simulate",
     "simulate_rounds",
     "collective_rounds",
+    "compressed_reduce_scatter_rounds",
     "p2p_messages",
     "packet_bounds",
     "packet_n_packets",
@@ -60,6 +65,7 @@ __all__ = [
     "DEFAULT_PLAN",
     "Plan",
     "SIZE_GRID",
+    "WIRES",
     "TuningTable",
     "autotune",
     "score_plan",

@@ -20,6 +20,11 @@ Quantities, mapped to the paper:
   stickiness R the arbiter burns ~``switch_cycles / R`` extra cycles per
   packet acquiring a new input FIFO (paper: 5 cycles/packet at R=1 falling
   to 1.69 at R=16).
+* ``quant_latency`` — per-hop quantise+dequantise pipeline cost of a
+  compressed link (``transport/compressed.py``): a fixed vector-unit pass
+  at each edge of every hop.  This is what keeps compressed links off the
+  latency-bound cells — the wire carries 4x fewer bytes but every hop pays
+  the codec, so compression only wins once serialization dominates.
 
 The module is deliberately jax-free (pure python + numpy) so it can be
 imported before jax initialises (benchmarks set XLA_FLAGS first) and used
@@ -32,6 +37,31 @@ from dataclasses import dataclass, replace
 
 import numpy as np
 
+#: scale-block size of the int8 compressed wire format: one f32 scale per
+#: ``WIRE_AXIS_ELEMS`` payload elements (transport/compressed.py's default)
+WIRE_AXIS_ELEMS = 256
+
+
+def int8_wire_nbytes(n_elems: int, axis_elems: int = WIRE_AXIS_ELEMS) -> int:
+    """Exact wire bytes of ``n_elems`` f32 payload elements on an int8
+    compressed link: 1 byte per element + a 4-byte f32 scale per block.
+    Single source for the traced transport's accounting and the
+    simulator's prediction (they are asserted equal to the byte)."""
+    n_elems = int(n_elems)
+    axis_elems = max(int(axis_elems), 1)
+    n_blocks = -(-n_elems // axis_elems) if n_elems else 0
+    return n_elems + 4 * n_blocks
+
+
+def clamp_chunks(n_chunks: int, leading_dim: int) -> int:
+    """Largest divisor of ``leading_dim`` <= the chunk-count hint (the
+    pipelined transports require n_chunks | leading dim; hints are never a
+    correctness constraint)."""
+    n = max(1, min(int(n_chunks), int(leading_dim)))
+    while leading_dim % n:
+        n -= 1
+    return n
+
 
 @dataclass(frozen=True)
 class LinkModel:
@@ -41,6 +71,7 @@ class LinkModel:
     link_bw: float = 50e9         # B/s per link per direction
     injection_base: float = 0.0   # s fixed overhead per transfer
     switch_cycles: float = 4.0    # extra arbiter cycles at R=1 (Tab. 4)
+    quant_latency: float = 1.5e-6  # s per hop: compressed-link codec pass
 
     # -- primitive costs ---------------------------------------------------
 
@@ -51,6 +82,26 @@ class LinkModel:
     def hop_time(self, flit_bytes: float) -> float:
         """One pipeline tick: forward a ``flit_bytes`` chunk one hop."""
         return self.hop_latency + self.serialization(flit_bytes)
+
+    # -- wire formats (compressed links, transport/compressed.py) ----------
+
+    def wire_bytes(self, nbytes: float, wire: str = "raw") -> float:
+        """Bytes actually serialized for an ``nbytes`` f32 payload under
+        the given wire format (``"raw"`` | ``"int8"``)."""
+        if wire == "raw":
+            return float(nbytes)
+        if wire == "int8":
+            return float(int8_wire_nbytes(max(int(round(nbytes / 4.0)), 1)))
+        raise ValueError(f"unknown wire format {wire!r}")
+
+    def hop_time_wire(self, flit_bytes: float, wire: str = "raw") -> float:
+        """One pipeline tick under a wire format: a raw link is
+        :meth:`hop_time`; a compressed link serializes the compressed
+        bytes but pays the per-hop codec pass on top."""
+        if wire == "raw":
+            return self.hop_time(flit_bytes)
+        return (self.hop_latency + self.quant_latency
+                + self.serialization(self.wire_bytes(flit_bytes, wire)))
 
     def injection_cycles(self, R: int) -> float:
         """Router cycles per packet as a function of polling stickiness R

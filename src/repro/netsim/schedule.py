@@ -50,14 +50,25 @@ def p2p_messages(rt, src: int, dst: int, nbytes: float, n_chunks: int = 1):
 
 
 def ring_perm_round(n_ranks: int, nbytes: float, step: int = 1):
-    """One ring-shift step: every rank forwards its buffer to the next
-    linearised rank.  Routed through the route table, so on non-ring
-    topologies (e.g. a bus) the wrap-around edge costs its real multi-hop
-    path — exactly what the physical fabric pays for a logical ring."""
-    s = 1 if step > 0 else -1
+    """One logical ring-permute round: every rank forwards its buffer to
+    the rank ``step`` positions along the linearised order.  Routed through
+    the route table, so a logical hop that is not a physical link (the
+    wrap-around edge on a bus, a distance-``s`` shift anywhere) costs its
+    real multi-hop path — exactly what the physical fabric pays."""
     return [
-        Message(i, (i + s) % n_ranks, n_flits=1, flit_bytes=nbytes)
+        Message(i, (i + step) % n_ranks, n_flits=1, flit_bytes=nbytes)
         for i in range(n_ranks)
+    ]
+
+
+def compressed_reduce_scatter_rounds(n_ranks: int, nbytes: float):
+    """The once-quantised contribution schedule the compressed wire's ring
+    reduce-scatter executes (DESIGN.md §7): round ``s`` ships every rank's
+    block contribution a logical distance ``s`` — charged its real routed
+    multi-hop cost, which is how the tuner sees that this schedule trades
+    byte-hops for P-independent quantisation error."""
+    return [
+        ring_perm_round(n_ranks, nbytes, step=s) for s in range(1, n_ranks)
     ]
 
 
@@ -185,20 +196,48 @@ def packet_n_packets(n_elems: int, pkt_elems: int = 32) -> int:
 def predict_transport_stats(
     comm, op: str, *, shape, dtype="float32", transport: str = "static",
     src: int = 0, dst: int = 0, n_chunks: int = 1,
-    pkt_elems: int = 32, slack_steps: int = 4,
+    pkt_elems: int = 32, slack_steps: int = 4, axis_elems: int | None = None,
 ):
     """Exact (steps, bytes_moved) a fresh backend instance tallies for one
     operation — the numbers ``Transport.stats`` holds after tracing.
 
     ops: ``p2p`` (uses src/dst/n_chunks), ``shift`` (one ring step),
     ``allgather`` (P-1 shifts of the local shard).  ``shape`` is the
-    per-rank array shape.
+    per-rank array shape.  ``transport="compressed"`` (static inner)
+    predicts the int8 wire's exact byte count — payload plus the bitcast
+    scale sidecar of ``axis_elems``-sized blocks (None = the transport's
+    default), the same :func:`repro.netsim.model.int8_wire_nbytes` figure
+    the traced backend accounts.
     """
     import numpy as np
+
+    from .model import WIRE_AXIS_ELEMS, clamp_chunks, int8_wire_nbytes
 
     elems = int(np.prod(shape)) if shape else 1
     nbytes = elems * _dtype_size(dtype)
     topo, rt = comm.topology, comm.route_table
+
+    if transport in ("compressed", "compressed:static"):
+        # the compressed wire is one flat int8 vector per leaf; the static
+        # inner backend then moves (and accounts) exactly those bytes
+        W = int8_wire_nbytes(
+            elems, WIRE_AXIS_ELEMS if axis_elems is None else axis_elems
+        )
+        if op == "p2p":
+            if src == dst:
+                return 0, 0
+            nc = clamp_chunks(n_chunks, W)
+            rep = simulate(topo, rt, p2p_messages(rt, src, dst, W, nc))
+            return rep.ticks, (W // nc) * rep.ticks
+        if op == "shift":
+            rep = simulate(topo, rt, ring_perm_round(comm.size, W))
+            return rep.ticks, W * rep.ticks
+        if op == "allgather":
+            ticks, _, _ = simulate_rounds(
+                topo, rt, collective_rounds(topo, rt, "allgather", "ring", W)
+            )
+            return ticks, W * ticks
+        raise ValueError(f"unknown op {op!r}")
 
     if transport == "static":
         if op == "p2p":

@@ -26,9 +26,11 @@ from dataclasses import dataclass, field
 from .model import LinkModel
 from .schedule import (
     collective_rounds,
+    compressed_reduce_scatter_rounds,
     p2p_messages,
     packet_bounds,
     packet_n_packets,
+    ring_perm_round,
 )
 from .sim import simulate, simulate_rounds
 
@@ -50,27 +52,40 @@ PACKET_ELEMS = 32
 PACKET_R = 8
 
 
+#: wire formats the tuner sweeps: raw f32 links vs int8 compressed links
+WIRES = ("raw", "int8")
+
+
 @dataclass(frozen=True)
 class Plan:
     """One tuned decision: which backend moves the bytes, how many chunks
-    ride the pipeline, and which schedule shape the collective uses."""
+    ride the pipeline, which schedule shape the collective uses, and the
+    wire format (``"raw"`` | ``"int8"`` — the compressed-link backend)."""
 
     transport: str = "static"
     n_chunks: int = 1
     algo: str = "ring"
+    wire: str = "raw"
+
+    @property
+    def transport_key(self) -> str:
+        """Registry key realising this plan's wire format: an ``"int8"``
+        wire wraps the inner backend in the compressed-link transport."""
+        if self.wire == "raw":
+            return self.transport
+        return f"compressed:{self.transport}"
 
     def clamp_chunks(self, leading_dim: int) -> int:
         """Largest divisor of ``leading_dim`` <= the tuned chunk count (the
         collectives require n_chunks | leading dim; the tuned value is a
         hint, never a correctness constraint)."""
-        n = max(1, min(self.n_chunks, leading_dim))
-        while leading_dim % n:
-            n -= 1
-        return n
+        from .model import clamp_chunks
+
+        return clamp_chunks(self.n_chunks, leading_dim)
 
     def to_dict(self):
         return {"transport": self.transport, "n_chunks": self.n_chunks,
-                "algo": self.algo}
+                "algo": self.algo, "wire": self.wire}
 
 
 DEFAULT_PLAN = Plan("static", 1, "ring")
@@ -83,7 +98,11 @@ def score_plan(topo, rt, op: str, nbytes: int, plan: Plan,
     Static/fused plans replay their schedule through the tick simulator;
     packet plans use the router's static schedule bound (the same
     ``_bounds`` the device path computes) times the per-packet cycle cost
-    including the R-stickiness arbitration factor (Tab. 4).
+    including the R-stickiness arbitration factor (Tab. 4).  An ``int8``
+    wire keeps the tick structure (same schedule, compressed flits) but
+    converts ticks through :meth:`LinkModel.hop_time_wire` — serialising
+    the compressed bytes and paying the per-hop codec pass, which is what
+    keeps compression off the latency-bound cells.
     """
     P = topo.n_ranks
     if P == 1 or nbytes <= 0:
@@ -106,15 +125,26 @@ def score_plan(topo, rt, op: str, nbytes: int, plan: Plan,
         return n_rounds * n_steps * model.hop_time(pkt_bytes) * \
             model.injection_cycles(PACKET_R)
 
-    # static / fused: replay the exact schedule
+    # static / fused: replay the exact schedule; tick period set by the
+    # flit's wire bytes under the plan's wire format
     if op == "p2p":
         rep = simulate(topo, rt, p2p_messages(rt, 0, far, nbytes,
                                               plan.n_chunks))
-        return rep.time(model)
-    rounds = collective_rounds(topo, rt, op, plan.algo, nbytes,
-                               n_chunks=plan.n_chunks)
-    _, secs, _ = simulate_rounds(topo, rt, rounds, model=model)
-    return secs or 0.0
+        return rep.ticks * model.hop_time_wire(rep.flit_bytes_max, plan.wire)
+    if op == "allreduce" and plan.wire == "int8":
+        # the compressed wire runs the once-quantised-contribution RS
+        # (distance-s permutes, real multi-hop cost) + a compressed AG
+        rounds = compressed_reduce_scatter_rounds(P, nbytes / P) + [
+            ring_perm_round(P, nbytes / P) for _ in range(P - 1)
+        ]
+    else:
+        rounds = collective_rounds(topo, rt, op, plan.algo, nbytes,
+                                   n_chunks=plan.n_chunks)
+    _, _, reports = simulate_rounds(topo, rt, rounds)
+    return sum(
+        r.ticks * model.hop_time_wire(r.flit_bytes_max, plan.wire)
+        for r in reports
+    )
 
 
 @dataclass
@@ -133,7 +163,8 @@ class TuningTable:
         nbytes = max(int(nbytes), 1)
         best = min(sizes, key=lambda s: abs(s.bit_length() - nbytes.bit_length()))
         e = self.entries[(op, best)]
-        return Plan(e["transport"], e["n_chunks"], e["algo"])
+        return Plan(e["transport"], e["n_chunks"], e["algo"],
+                    e.get("wire", "raw"))
 
     def score(self, op: str, nbytes: int) -> float:
         e = self.entries[(op, nbytes)]
@@ -149,6 +180,7 @@ class TuningTable:
                 "link_bw": self.model.link_bw,
                 "injection_base": self.model.injection_base,
                 "switch_cycles": self.model.switch_cycles,
+                "quant_latency": self.model.quant_latency,
             },
             "entries": [
                 {"op": op, "nbytes": size, **e}
@@ -189,8 +221,17 @@ def autotune(
     topo, rt=None, *,
     ops=OPS, sizes=SIZE_GRID, model: LinkModel | None = None,
     transports=("static", "packet"), n_chunks_grid=N_CHUNKS_GRID,
+    wires=WIRES,
 ) -> TuningTable:
-    """Sweep plans over the (op x size) grid and record the winners."""
+    """Sweep plans over the (op x size) grid and record the winners.
+
+    The wire dimension (``wires``) is swept for static-schedule plans:
+    an ``"int8"`` wire is the compressed-link backend wrapping the same
+    schedule.  The raw static default remains in every candidate set, so
+    a compressed plan is only ever recorded when the simulator scores it
+    strictly better — compression can win bandwidth-bound cells but never
+    displaces the default on latency-bound ones.
+    """
     from ..core.routing import compute_route_table  # lazy: keep import light
 
     if rt is None:
@@ -203,22 +244,34 @@ def autotune(
             best = None
             default_score = None
             for tname in transports:
-                for algo in algos:
-                    chunk_grid = n_chunks_grid
-                    if tname == "packet" or algo in ("tree", "staged") \
-                            or op == "allreduce":
-                        # whole-message rounds / router packetisation /
-                        # ring RS+AG: chunking cannot change the schedule
-                        chunk_grid = (1,)
-                    for nc in chunk_grid:
-                        plan = Plan(tname, nc, algo)
-                        s = score_plan(topo, rt, op, size, plan, model)
-                        if plan == DEFAULT_PLAN or (
-                            op == "p2p" and plan == Plan("static", 1, "routed")
-                        ):
-                            default_score = s
-                        if best is None or s < best[1]:
-                            best = (plan, s)
+                # wire formats ride static schedules; the packet cost
+                # model is packetisation-based, so it scores raw only.
+                # The rooted "reduce" op is also excluded: its chain/tree/
+                # staged schedules re-quantise the travelling partial sum
+                # every hop (no once-quantised form exists for it yet), so
+                # an int8 plan there would compound error with P — the
+                # exact failure the compressed reduce-scatter schedule
+                # avoids (DESIGN.md §7)
+                wire_grid = wires if tname == "static" and op != "reduce" \
+                    else ("raw",)
+                for wire in wire_grid:
+                    for algo in algos:
+                        chunk_grid = n_chunks_grid
+                        if tname == "packet" or algo in ("tree", "staged") \
+                                or op == "allreduce":
+                            # whole-message rounds / router packetisation /
+                            # ring RS+AG: chunking cannot change the schedule
+                            chunk_grid = (1,)
+                        for nc in chunk_grid:
+                            plan = Plan(tname, nc, algo, wire)
+                            s = score_plan(topo, rt, op, size, plan, model)
+                            if plan == DEFAULT_PLAN or (
+                                op == "p2p"
+                                and plan == Plan("static", 1, "routed")
+                            ):
+                                default_score = s
+                            if best is None or s < best[1]:
+                                best = (plan, s)
             plan, s = best
             assert default_score is not None, "default plan must be swept"
             # invariant: argmin over a set containing the default

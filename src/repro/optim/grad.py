@@ -1,5 +1,19 @@
-"""Gradient utilities: global-norm clipping; error feedback for the int8
-compressed gradient rings (core/collectives.make_int8_codec)."""
+"""Gradient utilities: global-norm clipping; error feedback for int8
+compressed gradient rings.
+
+Two error-feedback levels cooperate (DESIGN.md §7):
+
+* **per-hop** — inside :class:`repro.transport.compressed.
+  CompressedTransport`'s ``send_contribution``: the compressed ring
+  reduce-scatter transmits each hop's *contribution* as ``Q(c + e)``
+  (never a partial sum — re-rounding a travelling accumulator compounds
+  error with the ring size P) and carries the residual forward.  This
+  lives in the transport and needs nothing from the optimizer.
+* **end-to-end** — :class:`ErrorFeedback` here: the residual between the
+  gradients a step *wanted* to sync and what the lossy ring delivered is
+  re-injected into the next step's gradients (EF-SGD).  This is optimizer
+  state, threaded through the train step.
+"""
 
 from __future__ import annotations
 
@@ -18,10 +32,12 @@ def clip_by_global_norm(grads, max_norm: float):
 
 
 class ErrorFeedback:
-    """Residual accumulator for lossy (int8) gradient sync.
+    """End-to-end residual accumulator for lossy (int8) gradient sync.
 
     usage: g_corrected = ef.add(grads); <compressed all-reduce of
-    g_corrected -> g_synced>; ef.update(g_corrected, g_synced).
+    g_corrected -> g_synced (e.g. ``mesh.api.grad_sync(...,
+    compressed=True)``, which runs the ``compressed`` transport)>;
+    ef.update(g_corrected, g_synced) — or the one-call :meth:`sync` hook.
     State is a pytree like grads; functional (returns new state)."""
 
     @staticmethod
@@ -36,3 +52,12 @@ class ErrorFeedback:
     def update(corrected, synced):
         # residual = what we wanted to send minus what the lossy ring delivered
         return jax.tree.map(lambda c, s: c - s.astype(jnp.float32), corrected, synced)
+
+    @classmethod
+    def sync(cls, ef_state, grads, sync_fn):
+        """One-call hook: correct, sync through ``sync_fn`` (any lossy
+        all-reduce, e.g. a compressed-transport ``grad_sync``), and roll
+        the residual.  Returns ``(synced_grads, new_ef_state)``."""
+        corrected = cls.add(ef_state, grads)
+        synced = sync_fn(corrected)
+        return synced, cls.update(corrected, synced)

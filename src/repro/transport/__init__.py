@@ -15,7 +15,9 @@ that layer:
   registry.  Built-ins: ``"static"`` (trace-time routed ppermute
   schedules), ``"packet"`` (the dynamic store-and-forward router run end
   to end), ``"fused"`` (static schedules with a Pallas shift+accumulate
-  step on TPU).
+  step on TPU), ``"compressed"`` / ``"compressed:<inner>"`` (int8 wire
+  compression with blockwise scales and error feedback over any inner
+  backend, DESIGN.md §7).
 * :func:`~repro.transport.registry.resolve_comm_mode` — parses the
   ``comm_mode`` strings used across launch/configs/benchmarks
   (``"smi:packet"`` → SMI collectives over the packet backend).
@@ -31,6 +33,7 @@ from .base import Transport, TransportStats
 from .registry import (
     available_transports,
     get_transport,
+    is_transport_key,
     register_transport,
     resolve_comm_mode,
     resolve_transport,
@@ -41,6 +44,7 @@ __all__ = [
     "TransportStats",
     "available_transports",
     "get_transport",
+    "is_transport_key",
     "register_transport",
     "resolve_comm_mode",
     "resolve_transport",

@@ -39,6 +39,9 @@ class TransportStats:
     steps: int = 0
     bytes_moved: int = 0
     overflow: object | None = None  # jax scalar i32 once a router has run
+    #: identity of the jax trace whose runtime counters live here (set by
+    #: Transport._guard_runtime_reuse; None until a traced value is stored)
+    trace_token: object | None = None
 
     def add_overflow(self, ovf):
         self.overflow = ovf if self.overflow is None else self.overflow + ovf
@@ -106,6 +109,14 @@ class Transport(abc.ABC):
         return jax.tree.map(lambda a, b: a + b,
                             self.shift(x, comm, step), addend)
 
+    def send_contribution(self, c, comm, step: int = 1):
+        """Ship one rank-local contribution a logical ring distance
+        ``step`` (the lossy reduce-scatter's inner step).  On exact wires
+        this is just :meth:`shift`; lossy backends override it to quantise
+        the transmitted contribution exactly once, with error feedback
+        (``transport/compressed.py``)."""
+        return self.shift(c, comm, step)
+
     @abc.abstractmethod
     def p2p(self, x, *, src, dst, comm, n_chunks: int = 1):
         """Routed whole-message transfer: ``x``@src delivered to ``dst``
@@ -116,6 +127,29 @@ class Transport(abc.ABC):
     def account(self, x, steps: int = 1):
         self.stats.steps += steps
         self.stats.bytes_moved += tree_bytes(x) * steps
+
+    def _guard_runtime_reuse(self, traced):
+        """Refuse to mix traced counters from two different traces.
+
+        A ``runtime_stats`` backend accumulates *traced* values (the packet
+        router's overflow counter) into ``stats``.  Reusing one instance
+        across separately-traced functions would silently corrupt them —
+        summing a tracer from a dead trace either leaks it or bakes in a
+        stale constant (the DESIGN.md §3.2 footgun).  Called with the new
+        traced value before each accumulation; raises on cross-trace reuse.
+        """
+        token = getattr(traced, "_trace", None)
+        prev = self.stats.trace_token
+        if prev is not None and token is not None and prev is not token:
+            raise RuntimeError(
+                f"{type(self).__name__} instance reused across separately-"
+                "traced functions: its runtime stats (runtime_stats=True) "
+                "hold traced values from an earlier trace and would be "
+                "silently corrupted (DESIGN.md §3.2). Create a fresh "
+                "transport instance per traced function, or call "
+                "reset_stats() between traces."
+            )
+        self.stats.trace_token = token
 
     def reset_stats(self):
         self.stats = TransportStats()

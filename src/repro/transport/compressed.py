@@ -1,0 +1,280 @@
+"""Compressed-link transport: int8 wire format over any inner backend
+(DESIGN.md §7).
+
+The int8 codec that used to live as ad-hoc ``quantize=``/``dequantize=``
+kwargs on the ring collectives, generalised to the transport the layer was
+built for: :class:`CompressedTransport` wraps an *inner* backend (static /
+packet / fused) and quantises payloads at the send edge of every logical
+step — ``shift`` / ``permute`` / ``shift_accumulate`` / ``p2p`` — and
+dequantises at the receive edge.  Registry keys: ``"compressed"`` (static
+inner) and ``"compressed:<inner>"``; comm_mode ``"smi:compressed"``.
+
+Wire format (per pytree leaf): the payload flattens to f32, splits into
+``axis_elems``-sized blocks, and each block carries one f32 scale
+(``max|block| / 127``) beside its int8 values.  On the wire the int8
+payload and the bitcast scale sidecar travel as one flat int8 vector, so
+every inner backend moves it unchanged (the packet router's f32 wire
+carries int8 values exactly) and ``TransportStats`` counts the true wire
+bytes — ``n + 4 * ceil(n / axis_elems)`` per leaf, the exact figure
+:func:`repro.netsim.model.int8_wire_nbytes` predicts — because the inner
+backend accounts the wire pytree it actually moves.
+
+Requantisation of an already-quantised block is exact (the block max maps
+back to +/-127, reproducing the same scale and codes), so multi-hop chains
+(bcast, staged, allgather) pay quantisation error once, not once per hop.
+
+The ring reduce-scatter fix: re-rounding a travelling partial sum once per
+hop compounds quantisation error with the ring size P (the quantisation
+grid is proportional to the growing accumulator), and no per-hop trick can
+undo that — so the compressed wire does not transmit accumulators at all.
+:meth:`CompressedTransport.send_contribution` quantises each hop's
+*transmitted contribution* exactly once (with per-instance error-feedback
+residuals: transmit ``Q(c + e)``, carry ``e' = (c + e) - dq(Q(c + e))``),
+and ``stream_reduce_scatter`` ships it straight to its home rank with a
+distance-s ring permute, summing dequantised contributions in f32.  Each
+value on the wire is rounded once on its own (P-independent) grid, so the
+reduced blocks' error is bounded independent of P — regression-tested in
+tests/test_compressed.py.  The residual is a traced value, so it is keyed
+to the live jax trace and silently resets to zero when the instance is
+reused in a new trace (resetting is always correct: error feedback is an
+accuracy aid, never a correctness dependency).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..netsim.model import WIRE_AXIS_ELEMS, clamp_chunks
+from .base import Transport
+from .registry import register_transport
+
+
+# ------------------------------------------------------------------ codec
+
+
+def _n_blocks(n: int, axis_elems: int) -> int:
+    return -(-n // axis_elems) if n else 0
+
+
+def _block_elems(n: int, axis_elems: int | None) -> int:
+    """Effective block size: ``None`` means one scale for the whole tensor
+    (the legacy per-tensor codec); otherwise clamp to the element count."""
+    if axis_elems is None:
+        return max(n, 1)
+    return max(1, min(int(axis_elems), max(n, 1)))
+
+
+def quantize_int8(v, axis_elems: int | None = WIRE_AXIS_ELEMS):
+    """``v`` (any shape, floating) -> ``(q, scales)``: int8 codes shaped
+    like ``v`` plus one f32 scale per ``axis_elems``-sized block of the
+    flattened payload (``None`` = a single per-tensor scale)."""
+    if not jnp.issubdtype(v.dtype, jnp.floating):
+        raise TypeError(
+            f"int8 wire compression carries floating payloads; got {v.dtype} "
+            "(a lossy wire on integer data would silently corrupt it)"
+        )
+    flat = v.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    ae = _block_elems(n, axis_elems)
+    nb = _n_blocks(n, ae)
+    blocks = jnp.pad(flat, (0, nb * ae - n)).reshape(nb, ae)
+    scales = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127)
+    q = q.astype(jnp.int8).reshape(-1)[:n].reshape(v.shape)
+    return q, scales
+
+
+def dequantize_int8(wire, axis_elems: int | None = WIRE_AXIS_ELEMS):
+    """Inverse of :func:`quantize_int8` (f32 result, shaped like ``q``)."""
+    q, scales = wire
+    n = q.size
+    ae = _block_elems(n, axis_elems)
+    per_elem = jnp.repeat(scales, ae)[:n].reshape(q.shape)
+    return q.astype(jnp.float32) * per_elem
+
+
+def _pack_wire(q, scales):
+    """(q int8, scales f32) -> one flat int8 vector: payload then the
+    scales bitcast byte-by-byte.  A single sub-32-bit leaf rides every
+    inner backend (incl. the packet router's f32 wire) exactly."""
+    sb = lax.bitcast_convert_type(scales, jnp.int8).reshape(-1)
+    return jnp.concatenate([q.reshape(-1), sb])
+
+
+def _unpack_wire(wire, shape, n_blocks: int):
+    n = 1
+    for d in shape:
+        n *= int(d)
+    q = wire[:n].reshape(shape)
+    scales = lax.bitcast_convert_type(
+        wire[n:].reshape(n_blocks, 4), jnp.float32
+    )
+    return q, scales
+
+
+def _trace_token(v):
+    return getattr(v, "_trace", None)
+
+
+# -------------------------------------------------------------- transport
+
+
+@register_transport("compressed")
+@dataclass
+class CompressedTransport(Transport):
+    """int8 compressed links over any inner backend.
+
+    ``inner`` is a registry key or Transport instance (the wrapper adopts
+    its stats object, so steps/bytes tally in one place and the byte count
+    is automatically the wire's — int8 payload + scale sidecar, not f32).
+    ``axis_elems`` is the scale-block size (``None`` = per-tensor scale);
+    ``error_feedback`` enables the residual-carrying ``send_contribution``
+    hot path; ``codec`` overrides the built-in int8 codec with a legacy
+    ``(quantize, dequantize)`` pair (the deprecated-kwargs shim — shift
+    paths only, arbitrary wire pytrees, no packed accounting guarantees).
+    """
+
+    inner: object = "static"
+    axis_elems: int | None = WIRE_AXIS_ELEMS
+    error_feedback: bool = True
+    codec: tuple | None = None
+
+    #: results differ from the raw wire within the codec error bound —
+    #: callers needing exactness (integer payloads) must check this
+    lossy_wire = True
+    #: registry marker: "compressed:<inner>" keys construct this class
+    wraps_inner = True
+
+    def __post_init__(self):
+        from .registry import get_transport
+
+        if not isinstance(self.inner, Transport):
+            self.inner = get_transport(self.inner or "static")
+        # one shared counter object; adopt the inner's so an instance
+        # passed in with prior tallies keeps accumulating into them
+        self.stats = self.inner.stats
+        self.runtime_stats = self.inner.runtime_stats
+        self._ef = None  # error-feedback residuals (traced; trace-keyed)
+
+    # ------------------------------------------------------------- wire
+
+    def _encode(self, v):
+        if self.codec is not None:
+            return self.codec[0](v)
+        q, scales = quantize_int8(v, self.axis_elems)
+        return _pack_wire(q, scales)
+
+    def _decode_f32(self, wire, ref):
+        """Wire -> f32 payload shaped like ``ref`` (no dtype cast)."""
+        if self.codec is not None:
+            return self.codec[1](wire)
+        nb = _n_blocks(ref.size, _block_elems(ref.size, self.axis_elems))
+        q, scales = _unpack_wire(wire, ref.shape, nb)
+        return dequantize_int8((q, scales), self.axis_elems)
+
+    def _decode(self, wire, ref):
+        return self._decode_f32(wire, ref).astype(ref.dtype)
+
+    # ------------------------------------------------------------- steps
+
+    def permute(self, x, comm, pairs):
+        leaves, treedef = jax.tree.flatten(x)
+        moved = self.inner.permute([self._encode(l) for l in leaves],
+                                   comm, pairs)
+        return jax.tree.unflatten(
+            treedef, [self._decode(w, l) for w, l in zip(moved, leaves)]
+        )
+
+    def shift_accumulate(self, x, addend, comm, step: int = 1):
+        """Generic lossy hot path: ``dq(shift(Q(x))) + addend`` in f32.
+
+        This re-rounds a travelling accumulator and therefore compounds
+        error with the hop count — ``stream_reduce_scatter`` does NOT use
+        it on lossy wires (it dispatches to :meth:`send_contribution`'s
+        once-quantised schedule instead); it exists so generic callers of
+        the Transport protocol keep working over a compressed link.
+        """
+        moved = self.shift(x, comm, step)
+        return jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) + b.astype(jnp.float32),
+            moved, addend,
+        )
+
+    def send_contribution(self, c, comm, step: int = 1):
+        """Quantise ``c`` exactly once (with error feedback) and ship it a
+        logical ring distance ``step``; returns the dequantised f32 arrival.
+
+        The compressed ring reduce-scatter's inner step: the wire carries
+        each hop's *transmitted contribution* — never a partial sum — so
+        every value is rounded once on its own (P-independent) grid.  The
+        per-instance residual ``e`` feeds this rank's rounding error into
+        its next transmission (EF-SGD semantics across hops and across
+        repeated syncs on one instance).
+        """
+        leaves, treedef = jax.tree.flatten(c)
+        if self.error_feedback:
+            ef = self._ef_residuals(leaves)
+            sends = [l.astype(jnp.float32) + e for l, e in zip(leaves, ef)]
+        else:
+            sends = [l.astype(jnp.float32) for l in leaves]
+        wires = [self._encode(u) for u in sends]
+        if self.error_feedback:
+            # residual against the *local* wire: the permute moves the
+            # int8 codes bit-exactly, so this equals what the destination
+            # rank dequantises
+            self._ef = [
+                u - self._decode_f32(w, u) for u, w in zip(sends, wires)
+            ]
+        moved = self.inner.permute(wires, comm, comm.ring_perm(step))
+        return jax.tree.unflatten(
+            treedef,
+            [self._decode_f32(w, u) for w, u in zip(moved, sends)],
+        )
+
+    def p2p(self, x, *, src, dst, comm, n_chunks: int = 1):
+        if self.codec is not None:
+            raise NotImplementedError(
+                "custom-codec CompressedTransport supports shift/permute "
+                "paths only; use the built-in int8 codec for p2p"
+            )
+        if src == dst:
+            return x
+        q, scales = quantize_int8(x, self.axis_elems)
+        wire = _pack_wire(q, scales)
+        nc = clamp_chunks(n_chunks, wire.shape[0])
+        got = self.inner.p2p(wire, src=src, dst=dst, comm=comm, n_chunks=nc)
+        nb = _n_blocks(x.size, _block_elems(x.size, self.axis_elems))
+        gq, gs = _unpack_wire(got, x.shape, nb)
+        return dequantize_int8((gq, gs), self.axis_elems).astype(x.dtype)
+
+    # ---------------------------------------------------- EF state mgmt
+
+    def _ef_residuals(self, leaves):
+        """Current residuals, or zeros when absent/stale.  Staleness =
+        shape mismatch or a residual traced in a different (dead) jax
+        trace; resetting to zero is always correct."""
+        prev = self._ef
+        if (
+            prev is not None
+            and len(prev) == len(leaves)
+            and all(p.shape == l.shape for p, l in zip(prev, leaves))
+            and all(
+                _trace_token(p) is _trace_token(l)
+                for p, l in zip(prev, leaves)
+            )
+        ):
+            return prev
+        return [jnp.zeros(l.shape, jnp.float32) for l in leaves]
+
+    def reset_state(self):
+        """Drop error-feedback residuals (fresh collective / new trace)."""
+        self._ef = None
+
+    def reset_stats(self):
+        super().reset_stats()
+        self.inner.stats = self.stats
+        self.reset_state()

@@ -194,6 +194,7 @@ class PacketTransport(Transport):
             cfg, comm, self._route_table(comm), pay, inq_dst, inq_len,
             n_steps,
         )
+        self._guard_runtime_reuse(ovf)
         self.stats.steps += n_steps
         self.stats.bytes_moved += tree_bytes(x)
         is_recv = jnp.asarray(recv_arr)[r]

@@ -1,11 +1,18 @@
 """String-keyed transport registry + comm_mode parsing.
 
 The registry is the runtime-reconfigurability seam: call sites name their
-backend with a string (``"static"``, ``"packet"``, ``"fused"``), carried in
-``Communicator.transport`` or a ``comm_mode`` like ``"smi:packet"``, and the
-same compiled collective call site runs over whichever backend the string
-selects — the TPU rendering of the paper's "upload new routing tables, keep
-the bitstream".
+backend with a string (``"static"``, ``"packet"``, ``"fused"``,
+``"compressed"``), carried in ``Communicator.transport`` or a ``comm_mode``
+like ``"smi:packet"``, and the same compiled collective call site runs over
+whichever backend the string selects — the TPU rendering of the paper's
+"upload new routing tables, keep the bitstream".
+
+Wrapper backends compose by key: a class registered with a true
+``wraps_inner`` attribute (``CompressedTransport``) accepts
+``"<wrapper>:<inner>"`` keys — ``"compressed:packet"`` is the int8
+compressed wire over the dynamic router; bare ``"compressed"`` wraps the
+default static backend.  comm_mode grows the same spelling:
+``"smi:compressed"`` / ``"smi:compressed:packet"``.
 """
 
 from __future__ import annotations
@@ -31,7 +38,7 @@ def register_transport(name: str):
 
 def _ensure_builtins():
     if "static" not in _REGISTRY:
-        from . import fused, packet, static  # noqa: F401  (registration)
+        from . import compressed, fused, packet, static  # noqa: F401
 
 
 def available_transports() -> tuple[str, ...]:
@@ -39,15 +46,38 @@ def available_transports() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def _split_wrapper(key: str):
+    """``"compressed:packet"`` -> (wrapper_cls, "packet"); None otherwise."""
+    outer, _, inner = key.partition(":")
+    cls = _REGISTRY.get(outer)
+    if inner and cls is not None and getattr(cls, "wraps_inner", False) \
+            and inner in _REGISTRY:
+        return cls, inner
+    return None
+
+
+def is_transport_key(key: str) -> bool:
+    """True when ``key`` names a registered backend, including composed
+    ``"<wrapper>:<inner>"`` forms."""
+    _ensure_builtins()
+    return key in _REGISTRY or _split_wrapper(key) is not None
+
+
 def get_transport(name: str | None = None, **kw):
     """New Transport instance for ``name`` (None -> DEFAULT_TRANSPORT)."""
     _ensure_builtins()
     key = name or DEFAULT_TRANSPORT
-    if key not in _REGISTRY:
-        raise KeyError(
-            f"unknown transport {key!r}; available: {available_transports()}"
-        )
-    return _REGISTRY[key](**kw)
+    if key in _REGISTRY:
+        return _REGISTRY[key](**kw)
+    wrapped = _split_wrapper(key)
+    if wrapped is not None:
+        cls, inner = wrapped
+        return cls(inner=inner, **kw)
+    raise KeyError(
+        f"unknown transport {key!r}; available: {available_transports()} "
+        "(wrapper backends compose as '<wrapper>:<inner>', "
+        "e.g. 'compressed:packet')"
+    )
 
 
 def resolve_transport(transport, comm=None):
@@ -66,6 +96,7 @@ def resolve_comm_mode(mode: Union[str, None]) -> tuple[str, str]:
     """Split a comm_mode string into (base_mode, transport_key).
 
     ``"smi"`` -> ("smi", "static"); ``"smi:packet"`` -> ("smi", "packet");
+    ``"smi:compressed:packet"`` -> ("smi", "compressed:packet");
     ``"bulk"`` / ``"none"`` pass through with the default transport key
     (unused there).  Unknown bases or transports raise.
     """
@@ -80,8 +111,7 @@ def resolve_comm_mode(mode: Union[str, None]) -> tuple[str, str]:
         raise ValueError(
             f"comm_mode {mode!r}: only 'smi' takes a transport backend"
         )
-    _ensure_builtins()
-    if backend not in _REGISTRY:
+    if not is_transport_key(backend):
         raise ValueError(
             f"comm_mode {mode!r}: unknown transport {backend!r}; "
             f"available: {available_transports()}"

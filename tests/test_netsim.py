@@ -276,7 +276,7 @@ def test_autotuner_never_worse_than_static_default(name):
     for (op, size), e in table.entries.items():
         assert e["score"] <= e["static_score"] + 1e-18, (op, size, e)
         # re-score independently: the recorded numbers are reproducible
-        plan = Plan(e["transport"], e["n_chunks"], e["algo"])
+        plan = Plan(e["transport"], e["n_chunks"], e["algo"], e["wire"])
         assert score_plan(topo, rt, op, size, plan, model) == \
             pytest.approx(e["score"])
         default = DEFAULT_PLAN if op != "p2p" else Plan("static", 1, "routed")
@@ -292,6 +292,38 @@ def test_autotuner_prefers_chunked_pipeline_for_large_messages():
     assert small.n_chunks <= large.n_chunks
     assert large.n_chunks > 1  # pipelining must win when serialization-bound
     assert large.transport == "static"
+
+
+def test_autotuner_selects_compressed_for_bandwidth_bound_only():
+    """Acceptance invariant for the wire dimension (1x8 ring, default
+    LinkModel): bcast and allreduce each get at least one bandwidth-bound
+    cell on the int8 compressed wire, the smallest (latency-bound) cell
+    never does, and every compressed pick realises a valid transport key."""
+    table = autotune(Topology.ring(8))
+    for op in ("bcast", "allreduce"):
+        sizes = sorted({s for (o, s) in table.entries if o == op})
+        wires = {s: table.entries[(op, s)]["wire"] for s in sizes}
+        assert wires[sizes[0]] == "raw", (op, wires)
+        assert "int8" in wires.values(), (op, wires)
+        # compression must win a suffix of the size grid, not scattered
+        # latency-bound cells: once int8 wins, larger sizes stay int8
+        seen_int8 = False
+        for s in sizes:
+            if wires[s] == "int8":
+                seen_int8 = True
+            elif seen_int8:
+                pytest.fail(f"{op}: raw cell {s} above a compressed cell")
+        plan = table.lookup(op, sizes[-1])
+        assert plan.wire == "int8"
+        assert plan.transport_key.startswith("compressed:")
+        from repro.transport import is_transport_key
+
+        assert is_transport_key(plan.transport_key)
+    # the rooted reduce re-quantises its travelling partial every hop (no
+    # once-quantised schedule exists for it), so its cells must stay raw
+    for (op, size), e in table.entries.items():
+        if op == "reduce":
+            assert e["wire"] == "raw", (size, e)
 
 
 def test_tuning_table_json_roundtrip(tmp_path):
