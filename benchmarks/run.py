@@ -48,24 +48,33 @@ def main() -> None:
     failures = []
     results = []
     for name in todo:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         print(f"# --- {name} ---", flush=True)
         t0 = time.time()
         n0 = len(common.RESULTS)
-        kwargs = {}
-        if args.validate_sim and \
-                "validate_sim" in inspect.signature(mod.run).parameters:
-            kwargs["validate_sim"] = True
+        # every failure mode of one suite — import error, a raising run(),
+        # even a stray sys.exit(0) inside a suite — must mark the suite
+        # failed and continue, so a late failure can never be swallowed
+        # (or the whole driver short-circuited to success) before the
+        # summary: the CI perf gates downstream rely on this exit code
         try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            kwargs = {}
+            if args.validate_sim and \
+                    "validate_sim" in inspect.signature(mod.run).parameters:
+                kwargs["validate_sim"] = True
             mod.run(**kwargs)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
-        except Exception as e:  # noqa: BLE001
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:  # noqa: BLE001 — incl. SystemExit
             failures.append(name)
             traceback.print_exc()
             print(f"# {name} FAILED: {e}", flush=True)
         for row in common.RESULTS[n0:]:
             results.append({"suite": name, **row})
     if args.json:
+        # written before the exit-code decision: a red run still leaves
+        # its partial rows on disk for the perf-trajectory diff
         with open(args.json, "w") as f:
             json.dump({
                 "argv": sys.argv[1:],

@@ -1,0 +1,23 @@
+"""repro.apps: distributed application workloads over the SMI stack.
+
+The paper's evaluation is a suite of distributed benchmarks whose
+communication is *streamed through* the compute pipeline rather than
+bracketing it.  This package hosts those application kernels, built on the
+``core`` streaming layer, the pluggable ``transport`` backends and the
+``netsim`` cost model:
+
+* :class:`~repro.apps.halo.HaloExchange` — the N/S/E/W halo schedule of a
+  2D rank grid: backend-agnostic, start/finish-split for overlap, costed
+  and autotuned through netsim.
+* :class:`~repro.apps.stencil.DistributedStencil` — 2D heat diffusion
+  (paper §5.4.2): a pipelined step that hides the halo exchange behind the
+  Pallas interior update, plus the non-overlapped reference it matches bit
+  for bit.
+
+See DESIGN.md §8 for the layer contract.
+"""
+
+from .halo import HALO_TAG, HaloExchange
+from .stencil import DistributedStencil
+
+__all__ = ["HALO_TAG", "HaloExchange", "DistributedStencil"]

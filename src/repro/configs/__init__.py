@@ -1,5 +1,15 @@
 from .base import ModelConfig, ShapeConfig, SHAPES
-from .registry import ARCHS, COMM_MODES, TRANSPORT_BACKENDS, get_arch, smoke, cells
+from .registry import (
+    APP_WORKLOADS,
+    ARCHS,
+    COMM_MODES,
+    STENCIL_CASES,
+    TRANSPORT_BACKENDS,
+    cells,
+    get_arch,
+    smoke,
+)
 
-__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "COMM_MODES",
-           "TRANSPORT_BACKENDS", "get_arch", "smoke", "cells"]
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "APP_WORKLOADS", "ARCHS",
+           "COMM_MODES", "STENCIL_CASES", "TRANSPORT_BACKENDS", "get_arch",
+           "smoke", "cells"]

@@ -106,6 +106,19 @@ COMM_MODES: tuple[str, ...] = (
     "bulk",
 )
 
+#: distributed application workloads of ``repro/apps`` (launchable via
+#: ``python -m repro.launch.stencil`` etc.); each streams its communication
+#: through any of the TRANSPORT_BACKENDS via ``comm_mode="smi:<backend>"``
+APP_WORKLOADS: tuple[str, ...] = ("stencil",)
+
+#: default (grid, domain, steps) cells the stencil launcher/benchmark runs:
+#: strong scaling over the paper's 8-rank testbed shape plus the 1D ring
+STENCIL_CASES: dict[str, dict] = {
+    "ring8": {"grid": (1, 8), "domain": (256, 256), "steps": 8},
+    "torus2x4": {"grid": (2, 4), "domain": (256, 256), "steps": 8},
+    "torus2x2": {"grid": (2, 2), "domain": (256, 256), "steps": 8},
+}
+
 
 def get_arch(name: str) -> ModelConfig:
     if name not in ARCHS:

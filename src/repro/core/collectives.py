@@ -95,9 +95,14 @@ def _schedule_loop(tp, steps: int, body, carry):
             carry = body(jnp.asarray(t, jnp.int32), carry)
         return carry
     steps0, bytes0 = tp.stats.steps, tp.stats.bytes_moved
+    tags0 = {k: dict(v) for k, v in tp.stats.by_tag.items()}
     carry = lax.fori_loop(0, steps, body, carry)
     tp.stats.steps = steps0 + (tp.stats.steps - steps0) * steps
     tp.stats.bytes_moved = bytes0 + (tp.stats.bytes_moved - bytes0) * steps
+    for k, e in tp.stats.by_tag.items():
+        p = tags0.get(k, {"steps": 0, "bytes": 0})
+        e["steps"] = p["steps"] + (e["steps"] - p["steps"]) * steps
+        e["bytes"] = p["bytes"] + (e["bytes"] - p["bytes"]) * steps
     return carry
 
 

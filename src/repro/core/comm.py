@@ -82,8 +82,9 @@ class Communicator:
     def plan(self, op: str, nbytes: int):
         """The netsim autotuner's decision for ``op`` at ``nbytes`` on this
         communicator's topology (cached per topology signature).  This is
-        what the ``bcast``/``reduce``/``allreduce`` dispatchers and
-        ``stream_p2p(plan="auto")`` consult by default."""
+        what the ``bcast``/``reduce``/``allreduce`` dispatchers,
+        ``stream_p2p(plan="auto")`` and the apps layer's halo exchange
+        (``op="halo"``, ``nbytes`` = one slab) consult by default."""
         from ..netsim.tune import tuned_plan
 
         return tuned_plan(op, self, nbytes)

@@ -32,6 +32,7 @@ from jax import lax
 
 from .comm import Communicator
 from .collectives import _resolve, stream_reduce_scatter
+from .streaming import _pvary
 
 
 def _default_mm(a, b):
@@ -230,6 +231,84 @@ def stream_ring_attention(
 # ---------------------------------------------------------------------------
 
 
+# (src, dst) pairs shifting the row-major rank grid by (drx, dry) — the
+# fixed neighbour wiring of one halo direction (no wrap: channels to absent
+# neighbours "simply remain unused").  The single implementation lives in
+# jax-free netsim.schedule so the simulator and the traced schedule can
+# never disagree on the wiring.
+from ..netsim.schedule import halo_pairs as halo_perm  # noqa: E402
+
+
+def halo_exchange_2d_start(
+    x: jax.Array,
+    comm: Communicator,
+    *,
+    grid: tuple[int, int],
+    halo: tuple[int, int] = (1, 1),
+    transport=None,
+    tag: str = "halo",
+):
+    """Launch the four neighbour permutes of a 2D halo exchange and return
+    the in-flight halo slabs — the *send edge* of the overlap window.
+
+    Issuing the permutes before any dependent compute is traced is what
+    lets XLA overlap the ICI transfers with the interior update that the
+    ``repro/apps`` stencil runs between :func:`halo_exchange_2d_start` and
+    :func:`halo_exchange_2d_finish` (the paper's pipelined halo pattern).
+    Steps are accounted under ``tag`` so halo wire traffic stays separable
+    from any collectives sharing the backend instance.
+    """
+    RX, RY = grid
+    hx, hy = halo
+    assert comm.size == RX * RY
+    t = _resolve(transport, comm)
+
+    with t.tagged(tag):
+        def shift(buf, drx, dry):
+            pairs = halo_perm(grid, drx, dry)
+            if not pairs:
+                # a 1-row/1-column grid has no neighbours this direction:
+                # no wire step at all (and none accounted) — the paper's
+                # unused channels; every rank's halo is the bubble value
+                return _pvary(jnp.zeros_like(buf), comm)
+            return t.permute(buf, comm, pairs)
+
+        # x[:hx] are my north boundary rows; the north neighbour (rx-1)
+        # needs them as its south halo.  Receiving side of the same permute:
+        # the slab from (rx+1) is my south halo — and so on per direction.
+        south_halo = shift(x[:hx], -1, 0)   # from rx+1: their north rows
+        north_halo = shift(x[-hx:], +1, 0)  # from rx-1: their south rows
+        east_halo = shift(x[:, :hy], 0, -1)  # from ry+1: their west cols
+        west_halo = shift(x[:, -hy:], 0, +1)  # from ry-1: their east cols
+    return south_halo, north_halo, east_halo, west_halo
+
+
+def halo_exchange_2d_finish(
+    x: jax.Array,
+    inflight,
+    comm: Communicator,
+    *,
+    grid: tuple[int, int],
+    halo: tuple[int, int] = (1, 1),
+):
+    """Assemble the padded tile from ``x`` and the slabs returned by
+    :func:`halo_exchange_2d_start` — the *receive edge* of the overlap
+    window.  Physical-boundary halos are zeroed (Dirichlet)."""
+    RX, RY = grid
+    hx, hy = halo
+    south_halo, north_halo, east_halo, west_halo = inflight
+    r = comm.rank()
+    rx, ry = r // RY, r % RY
+    Nx, Ny = x.shape[0], x.shape[1]
+    out = jnp.zeros((Nx + 2 * hx, Ny + 2 * hy) + x.shape[2:], x.dtype)
+    out = out.at[hx:-hx, hy:-hy].set(x)
+    out = out.at[:hx, hy:-hy].set(jnp.where(rx > 0, north_halo, 0))
+    out = out.at[-hx:, hy:-hy].set(jnp.where(rx < RX - 1, south_halo, 0))
+    out = out.at[hx:-hx, :hy].set(jnp.where(ry > 0, west_halo, 0))
+    out = out.at[hx:-hx, -hy:].set(jnp.where(ry < RY - 1, east_halo, 0))
+    return out
+
+
 def halo_exchange_2d(
     x: jax.Array,
     comm: Communicator,
@@ -242,47 +321,12 @@ def halo_exchange_2d(
 
     x: (Nx_local, Ny_local, ...) local tile of the global domain; ranks are
     laid out row-major on ``grid`` = (RX, RY) over the communicator.  Returns
-    the tile padded with received halos (zero at physical boundaries —
-    channels to absent neighbours "simply remain unused").
+    the tile padded with received halos (zero at physical boundaries).
+
+    This is the non-overlapped composition; the ``repro/apps`` stencil uses
+    the start/finish split to hide the exchange behind interior compute.
     """
-    RX, RY = grid
-    hx, hy = halo
-    r = comm.rank()
-    rx, ry = r // RY, r % RY
-    n = comm.size
-    t = _resolve(transport, comm)
-    assert n == RX * RY
-
-    def perm(drx, dry):
-        pairs = []
-        for s in range(n):
-            sx, sy = s // RY, s % RY
-            tx, ty = sx + drx, sy + dry
-            if 0 <= tx < RX and 0 <= ty < RY:
-                pairs.append((s, tx * RY + ty))
-        return pairs
-
-    def shift(buf, drx, dry):
-        return t.permute(buf, comm, perm(drx, dry))
-
-    # south halo travels north->south etc.  Send my boundary slabs.
-    north = shift(x[:hx], -1, 0)       # my top rows -> north neighbour's south? no:
-    # send top rows to the north neighbour? Convention: north = lower rx.
-    # x[:hx] are my north boundary rows; the north neighbour needs them as its
-    # south halo -> send to (rx-1).  Receiving side: from (rx+1): my south halo.
-    south_halo = north                  # received from rx+1: their north rows
-    south = shift(x[-hx:], +1, 0)       # my south rows -> south neighbour
-    north_halo = south                  # received from rx-1: their south rows
-    west = shift(x[:, :hy], 0, -1)
-    east_halo = west                    # from ry+1: their west cols
-    east = shift(x[:, -hy:], 0, +1)
-    west_halo = east                    # from ry-1: their east cols
-
-    Nx, Ny = x.shape[0], x.shape[1]
-    out = jnp.zeros((Nx + 2 * hx, Ny + 2 * hy) + x.shape[2:], x.dtype)
-    out = out.at[hx:-hx, hy:-hy].set(x)
-    out = out.at[:hx, hy:-hy].set(jnp.where(rx > 0, north_halo, 0))
-    out = out.at[-hx:, hy:-hy].set(jnp.where(rx < RX - 1, south_halo, 0))
-    out = out.at[hx:-hx, :hy].set(jnp.where(ry > 0, west_halo, 0))
-    out = out.at[hx:-hx, -hy:].set(jnp.where(ry < RY - 1, east_halo, 0))
-    return out
+    inflight = halo_exchange_2d_start(
+        x, comm, grid=grid, halo=halo, transport=transport
+    )
+    return halo_exchange_2d_finish(x, inflight, comm, grid=grid, halo=halo)

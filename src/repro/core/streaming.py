@@ -117,13 +117,22 @@ def stream_exchange(
     pairs: list[tuple[int, int]],
     comm: Communicator,
     transport=None,
+    tag: str | None = None,
 ) -> jax.Array:
     """Single-hop bulk exchange over explicit (src, dst) pairs — the
     "fixed wiring" streaming model of paper Fig. 3, for benchmarks and halo
-    exchanges between mesh neighbours (one physical link per pair)."""
+    exchanges between mesh neighbours (one physical link per pair).
+
+    ``tag`` buckets the step's wire accounting under a message tag
+    (:meth:`repro.transport.base.Transport.tagged`), so application phases
+    sharing a backend instance keep separable cost counters."""
     from ..transport.registry import resolve_transport
 
-    return resolve_transport(transport, comm).permute(x, comm, pairs)
+    t = resolve_transport(transport, comm)
+    if tag is None:
+        return t.permute(x, comm, pairs)
+    with t.tagged(tag):
+        return t.permute(x, comm, pairs)
 
 
 # ---------------------------------------------------------------------------

@@ -13,12 +13,12 @@ oracle).  Validated with interpret=True on CPU; real Mosaic lowering on TPU.
 
 from .matmul import matmul, matmul_ref
 from .flash_attention import flash_attention, attention_ref, attention_chunked_ref
-from .stencil import stencil_step, stencil_run, stencil_ref
+from .stencil import stencil_step, stencil_run, stencil_interior, stencil_ref
 from .ssd import ssd_scan, ssd_decode_step, ssd_ref
 
 __all__ = [
     "matmul", "matmul_ref",
     "flash_attention", "attention_ref", "attention_chunked_ref",
-    "stencil_step", "stencil_run", "stencil_ref",
+    "stencil_step", "stencil_run", "stencil_interior", "stencil_ref",
     "ssd_scan", "ssd_decode_step", "ssd_ref",
 ]

@@ -1,4 +1,4 @@
-from .ops import stencil_step, stencil_run
+from .ops import stencil_step, stencil_run, stencil_interior
 from .ref import stencil_ref
 
-__all__ = ["stencil_step", "stencil_run", "stencil_ref"]
+__all__ = ["stencil_step", "stencil_run", "stencil_interior", "stencil_ref"]

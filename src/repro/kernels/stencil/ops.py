@@ -38,3 +38,17 @@ def stencil_run(x, n_steps: int, **kw):
         return stencil_step(v, **kw)
 
     return jax.lax.fori_loop(0, n_steps, body, x)
+
+
+def stencil_interior(x: jax.Array, **kw) -> jax.Array:
+    """Interior output points of one sweep: rows/cols ``1..-2`` of
+    :func:`stencil_step`, which depend only on values already resident in
+    the local tile — no halo reads.  This is the compute the ``repro/apps``
+    distributed stencil runs *while* its halo slabs are in flight (the
+    overlap window); the boundary ring is finished after the exchange
+    lands.  Same kwargs as :func:`stencil_step` (``use_pallas`` /
+    ``interpret`` select the Pallas kernel), and bit-identical to the
+    corresponding interior of the halo'd reference sweep: every point is
+    the same ``0.25 * (n + s + w + e)`` f32 expression.
+    """
+    return stencil_step(x, **kw)[1:-1, 1:-1]

@@ -22,11 +22,17 @@ See DESIGN.md §6 for the subsystem contract.
 from .model import LinkModel, WIRE_AXIS_ELEMS, int8_wire_nbytes
 from .sim import Message, SimReport, simulate, simulate_rounds
 from .schedule import (
+    HALO_DIRECTIONS,
     collective_rounds,
     compressed_reduce_scatter_rounds,
+    halo_pairs,
+    halo_rounds,
+    halo_slab_elems,
     p2p_messages,
     packet_bounds,
     packet_n_packets,
+    predict_halo_stats,
+    predict_halo_time,
     predict_transport_stats,
     ring_perm_round,
 )
@@ -51,11 +57,17 @@ __all__ = [
     "SimReport",
     "simulate",
     "simulate_rounds",
+    "HALO_DIRECTIONS",
     "collective_rounds",
     "compressed_reduce_scatter_rounds",
+    "halo_pairs",
+    "halo_rounds",
+    "halo_slab_elems",
     "p2p_messages",
     "packet_bounds",
     "packet_n_packets",
+    "predict_halo_stats",
+    "predict_halo_time",
     "predict_transport_stats",
     "ring_perm_round",
     "fit",

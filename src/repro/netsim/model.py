@@ -129,6 +129,20 @@ class LinkModel:
         t = self.p2p_time(nbytes, hops, n_chunks)
         return nbytes / t if t > 0 else float("inf")
 
+    # -- overlap window (the apps layer's pipelined steps, paper §5.4.2) ---
+
+    def overlapped_step_time(self, compute_s: float, comm_s: float) -> float:
+        """One pipelined application step: communication streams during the
+        compute pipeline, so the step costs the *longer* of the two — the
+        paper's compute/communication-overlap inequality.  This is the
+        model column of the overlapped stencil."""
+        return max(compute_s, comm_s)
+
+    def serial_step_time(self, compute_s: float, comm_s: float) -> float:
+        """The non-overlapped reference: exchange completes before compute
+        starts, so the step pays the sum."""
+        return compute_s + comm_s
+
     # -- construction ------------------------------------------------------
 
     @staticmethod

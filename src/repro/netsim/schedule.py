@@ -163,6 +163,124 @@ def collective_rounds(
 
 
 # ---------------------------------------------------------------------------
+# halo-exchange schedules (the repro/apps stencil's communication phase)
+# ---------------------------------------------------------------------------
+
+
+def halo_pairs(grid, drx: int, dry: int):
+    """(src, dst) pairs of one halo direction: the fixed neighbour wiring
+    both the traced exchange (``core/overlap.py`` re-exports this as
+    ``halo_perm``) and the simulator replay.  Lives here, jax-free, so
+    netsim stays importable before jax initialises and the two sides can
+    never drift."""
+    RX, RY = grid
+    pairs = []
+    for s in range(RX * RY):
+        sx, sy = s // RY, s % RY
+        tx, ty = sx + drx, sy + dry
+        if 0 <= tx < RX and 0 <= ty < RY:
+            pairs.append((s, tx * RY + ty))
+    return pairs
+
+
+#: the four halo directions in trace order: (drx, dry, slab_axis) where
+#: slab_axis 0 = an N/S row slab, 1 = an E/W column slab
+HALO_DIRECTIONS = ((-1, 0, 0), (+1, 0, 0), (0, -1, 1), (0, +1, 1))
+
+
+def halo_slab_elems(shape, halo=(1, 1)) -> tuple[int, int]:
+    """(ns_elems, ew_elems): element counts of one N/S row slab and one E/W
+    column slab of a per-rank tile ``shape`` = (Nx, Ny, ...)."""
+    import numpy as np
+
+    hx, hy = halo
+    trail = int(np.prod(shape[2:])) if len(shape) > 2 else 1
+    return hx * shape[1] * trail, shape[0] * hy * trail
+
+
+def halo_rounds(grid, ns_bytes: float, ew_bytes: float):
+    """Barrier-separated message rounds of the 2D halo exchange: one round
+    per non-empty direction (N, S, W, E), each a neighbour permute carrying
+    the direction's slab.  The simulator route-expands each pair through
+    the route table, so a grid laid over a non-matching topology pays its
+    real multi-hop cost."""
+    rounds = []
+    for drx, dry, axis in HALO_DIRECTIONS:
+        pairs = halo_pairs(grid, drx, dry)
+        if not pairs:
+            continue
+        nbytes = ns_bytes if axis == 0 else ew_bytes
+        rounds.append(
+            [Message(s, d, n_flits=1, flit_bytes=nbytes) for s, d in pairs]
+        )
+    return rounds
+
+
+def predict_halo_stats(
+    comm, *, grid, shape, dtype="float32", halo=(1, 1),
+    transport: str = "static", pkt_elems: int = 32, slack_steps: int = 4,
+    axis_elems: int | None = None,
+):
+    """Exact (steps, bytes) a fresh backend tallies for one halo exchange
+    (``repro.core.overlap.halo_exchange_2d_start``): one permute per
+    non-empty direction; the compressed wire carries the int8 payload +
+    scale sidecar; the packet backend pays its static router bound per
+    direction.  Asserted against traced ``stats.by_tag["halo"]`` counters
+    in tests/test_apps.py."""
+    from .model import WIRE_AXIS_ELEMS, int8_wire_nbytes
+
+    ns_elems, ew_elems = halo_slab_elems(shape, halo)
+    esz = _dtype_size(dtype)
+    rt = comm.route_table
+    steps = 0
+    nbytes = 0
+    for drx, dry, axis in HALO_DIRECTIONS:
+        pairs = halo_pairs(grid, drx, dry)
+        if not pairs:
+            continue
+        elems = ns_elems if axis == 0 else ew_elems
+        if transport in ("compressed", "compressed:static"):
+            wire = int8_wire_nbytes(
+                elems, WIRE_AXIS_ELEMS if axis_elems is None else axis_elems
+            )
+            steps += 1
+            nbytes += wire
+        elif transport in ("static", "fused"):
+            steps += 1
+            nbytes += elems * esz
+        elif transport == "packet":
+            K = packet_n_packets(elems, pkt_elems)
+            n_steps, _ = packet_bounds(
+                rt, pairs, K, pkt_elems=pkt_elems, slack_steps=slack_steps
+            )
+            steps += n_steps
+            nbytes += elems * esz
+        else:
+            raise ValueError(f"no halo stats model for transport {transport!r}")
+    return steps, nbytes
+
+
+def predict_halo_time(
+    comm, *, grid, shape, dtype="float32", halo=(1, 1), model=None,
+    wire: str = "raw",
+):
+    """Predicted seconds of one halo exchange under a
+    :class:`~repro.netsim.model.LinkModel`: replay the direction rounds
+    through the tick simulator and convert ticks through the wire-aware
+    hop time — the model column of benchmarks/stencil_bench.py."""
+    from .model import LinkModel
+
+    model = model or LinkModel.default_v5e()
+    ns_elems, ew_elems = halo_slab_elems(shape, halo)
+    esz = _dtype_size(dtype)
+    rounds = halo_rounds(grid, ns_elems * esz, ew_elems * esz)
+    _, _, reports = simulate_rounds(comm.topology, comm.route_table, rounds)
+    return sum(
+        r.ticks * model.hop_time_wire(r.flit_bytes_max, wire) for r in reports
+    )
+
+
+# ---------------------------------------------------------------------------
 # packet-backend schedule bounds (shared with the device path)
 # ---------------------------------------------------------------------------
 

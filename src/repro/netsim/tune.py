@@ -25,8 +25,11 @@ from dataclasses import dataclass, field
 
 from .model import LinkModel
 from .schedule import (
+    HALO_DIRECTIONS,
     collective_rounds,
     compressed_reduce_scatter_rounds,
+    halo_pairs,
+    halo_rounds,
     p2p_messages,
     packet_bounds,
     packet_n_packets,
@@ -39,13 +42,19 @@ SIZE_GRID = tuple(1 << p for p in range(10, 25, 2))
 
 N_CHUNKS_GRID = (1, 2, 4, 8, 16, 32)
 
-OPS = ("p2p", "bcast", "reduce", "allreduce")
+#: ``halo`` is the repro/apps stencil's exchange: ``nbytes`` is one halo
+#: slab; the schedule shape is fixed (one neighbour permute per direction)
+#: so the tuner's decision is which backend moves the slabs
+OPS = ("p2p", "bcast", "reduce", "allreduce", "halo")
 
 ALGOS = {
     "p2p": ("routed",),
     "bcast": ("ring", "tree", "staged"),
     "reduce": ("ring", "tree", "staged"),
     "allreduce": ("ring",),
+    # one schedule shape; "ring" labels the neighbour-permute rounds and
+    # keeps the static default plan inside the candidate set
+    "halo": ("ring",),
 }
 
 PACKET_ELEMS = 32
@@ -109,6 +118,32 @@ def score_plan(topo, rt, op: str, nbytes: int, plan: Plan,
         return 0.0
     # score p2p at the topology's worst case: the farthest rank from 0
     far = max(range(P), key=lambda d: rt.n_hops(0, d))
+
+    if op == "halo":
+        # ``nbytes`` = one halo slab; the decomposition grid is the 2D
+        # torus's own dims, else a 1 x P line over the linearised ranks
+        grid = topo.dims if topo.dims is not None and len(topo.dims) == 2 \
+            else (1, P)
+        if plan.transport == "packet":
+            pkt_bytes = PACKET_ELEMS * 4
+            K = packet_n_packets(max(int(nbytes // 4), 1), PACKET_ELEMS)
+            total = 0
+            for drx, dry, _axis in HALO_DIRECTIONS:
+                pairs = halo_pairs(grid, drx, dry)
+                if not pairs:
+                    continue
+                n_steps, _ = packet_bounds(rt, pairs, K,
+                                           pkt_elems=PACKET_ELEMS)
+                total += n_steps
+            return total * model.hop_time(pkt_bytes) * \
+                model.injection_cycles(PACKET_R)
+        _, _, reports = simulate_rounds(
+            topo, rt, halo_rounds(grid, nbytes, nbytes)
+        )
+        return sum(
+            r.ticks * model.hop_time_wire(r.flit_bytes_max, plan.wire)
+            for r in reports
+        )
 
     if plan.transport == "packet":
         pkt_bytes = PACKET_ELEMS * 4
@@ -251,16 +286,20 @@ def autotune(
                 # every hop (no once-quantised form exists for it yet), so
                 # an int8 plan there would compound error with P — the
                 # exact failure the compressed reduce-scatter schedule
-                # avoids (DESIGN.md §7)
-                wire_grid = wires if tname == "static" and op != "reduce" \
-                    else ("raw",)
+                # avoids (DESIGN.md §7).  "halo" is excluded too: the apps
+                # layer diffs distributed against single-rank results
+                # exactly, so a lossy wire there is an explicit user
+                # choice (comm_mode="smi:compressed"), never a tuned one
+                wire_grid = wires if tname == "static" \
+                    and op not in ("reduce", "halo") else ("raw",)
                 for wire in wire_grid:
                     for algo in algos:
                         chunk_grid = n_chunks_grid
                         if tname == "packet" or algo in ("tree", "staged") \
-                                or op == "allreduce":
+                                or op in ("allreduce", "halo"):
                             # whole-message rounds / router packetisation /
-                            # ring RS+AG: chunking cannot change the schedule
+                            # ring RS+AG / single-hop halo permutes:
+                            # chunking cannot change the schedule
                             chunk_grid = (1,)
                         for nc in chunk_grid:
                             plan = Plan(tname, nc, algo, wire)

@@ -21,6 +21,7 @@ router's runtime overflow counter so lossless runs are assertable.
 from __future__ import annotations
 
 import abc
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 import jax
@@ -34,6 +35,13 @@ class TransportStats:
     one "step" = one link-schedule tick; bytes = payload carried per rank
     per tick, summed).  ``overflow`` is a traced runtime counter summed over
     router runs (``None`` for backends that cannot drop traffic).
+
+    ``by_tag`` splits the same counters per message *tag* (set with
+    :meth:`Transport.tagged`): an application phase that shares one backend
+    instance with other traffic — the halo exchange of ``repro/apps`` riding
+    a communicator that also moves collectives — still gets its own
+    steps/bytes line, which is what lets the netsim halo predictions be
+    asserted against exactly the halo's wire traffic.
     """
 
     steps: int = 0
@@ -42,6 +50,13 @@ class TransportStats:
     #: identity of the jax trace whose runtime counters live here (set by
     #: Transport._guard_runtime_reuse; None until a traced value is stored)
     trace_token: object | None = None
+    #: tag -> {"steps": int, "bytes": int} sub-accounting (see class doc)
+    by_tag: dict = field(default_factory=dict)
+
+    def tag_counts(self, tag: str) -> tuple[int, int]:
+        """(steps, bytes) tallied under ``tag`` (0, 0 when never tagged)."""
+        e = self.by_tag.get(tag, {"steps": 0, "bytes": 0})
+        return e["steps"], e["bytes"]
 
     def add_overflow(self, ovf):
         self.overflow = ovf if self.overflow is None else self.overflow + ovf
@@ -80,6 +95,9 @@ class Transport(abc.ABC):
     # registry key; a plain class attribute (NOT a dataclass field) so
     # @register_transport's assignment reaches every instance
     name = ""
+
+    #: active message tag (see :meth:`tagged`)
+    _tag: str | None = None
 
     #: True when step methods thread *traced* values into ``stats`` (the
     #: packet backend's overflow counter).  Such a backend must not be
@@ -124,9 +142,46 @@ class Transport(abc.ABC):
 
     # ---------------------------------------------------------- counters
 
-    def account(self, x, steps: int = 1):
+    @contextmanager
+    def tagged(self, tag: str):
+        """Tag every step accounted inside the block (halo message tagging).
+
+        The tag buckets the same trace-time counters into
+        ``stats.by_tag[tag]`` so one backend instance can serve several
+        application phases — interior collectives and halo slabs — with
+        separately assertable wire costs.  Wrapper backends (the compressed
+        link) propagate the tag down their ``inner`` chain, since the inner
+        backend is the one that accounts the wire it actually moves.
+        """
+        chain = [self]
+        inner = getattr(self, "inner", None)
+        while isinstance(inner, Transport):
+            chain.append(inner)
+            inner = getattr(inner, "inner", None)
+        prev = [t._tag for t in chain]
+        for t in chain:
+            t._tag = tag
+        try:
+            yield self
+        finally:
+            for t, p in zip(chain, prev):
+                t._tag = p
+
+    def tally(self, steps: int, nbytes: int):
+        """Add raw (steps, bytes) to the counters, honouring the active tag
+        (the single accounting funnel; backends with their own step-count
+        formulae — the packet router — call this directly)."""
         self.stats.steps += steps
-        self.stats.bytes_moved += tree_bytes(x) * steps
+        self.stats.bytes_moved += nbytes
+        if self._tag is not None:
+            e = self.stats.by_tag.setdefault(
+                self._tag, {"steps": 0, "bytes": 0}
+            )
+            e["steps"] += steps
+            e["bytes"] += nbytes
+
+    def account(self, x, steps: int = 1):
+        self.tally(steps, tree_bytes(x) * steps)
 
     def _guard_runtime_reuse(self, traced):
         """Refuse to mix traced counters from two different traces.

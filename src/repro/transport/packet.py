@@ -195,8 +195,7 @@ class PacketTransport(Transport):
             n_steps,
         )
         self._guard_runtime_reuse(ovf)
-        self.stats.steps += n_steps
-        self.stats.bytes_moved += tree_bytes(x)
+        self.tally(n_steps, tree_bytes(x))
         is_recv = jnp.asarray(recv_arr)[r]
         # Undelivered packets (an under-provisioned n_steps bound) would
         # silently back-fill zeros below — fold the delivery shortfall into

@@ -1,0 +1,174 @@
+"""repro/apps contract tests (DESIGN.md §8).
+
+Three pillars:
+
+* **overlap exactness** — the pipelined stencil step (interior update
+  while halos fly) is bit-identical to the non-overlapped reference on
+  ring and torus grids under every transport backend, including the lossy
+  compressed wire (both schedules quantise identical slabs);
+* **end-to-end correctness** — the distributed run reassembles to the
+  single-rank sweep exactly on exact wires, within the codec bound on
+  ``smi:compressed``;
+* **costing exactness** — the halo exchange's traced, *tagged* transport
+  counters equal the netsim prediction to the step and the byte, and the
+  tuner's ``halo`` cells obey the never-worse-than-static invariant the
+  other ops already carry (tests/test_netsim.py sweeps them since "halo"
+  is in OPS).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import HALO_TAG, DistributedStencil, HaloExchange
+from repro.core.overlap import halo_perm
+from repro.netsim import Plan, halo_pairs, predict_halo_time
+from repro.transport import get_transport
+
+BACKENDS = ["static", "packet", "fused", "compressed"]
+
+GRIDS = {"ring": (1, 8), "torus": (2, 4)}
+
+
+def _make(grid_name, **kw):
+    app = DistributedStencil.create(GRIDS[grid_name], **kw)
+    return app, app.make_mesh()
+
+
+@pytest.fixture(scope="module")
+def world():
+    return np.random.RandomState(0).randn(32, 32).astype(np.float32)
+
+
+@pytest.mark.parametrize("grid_name", sorted(GRIDS))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_overlapped_matches_reference_bit_exact(grid_name, backend, world,
+                                                devices8):
+    app, mesh = _make(grid_name)
+    tiles = jnp.asarray(app.scatter(world))
+    # fresh instances per traced function: runtime-stats backends (packet)
+    # may not be reused across traces
+    ref = np.asarray(app.jitted(
+        mesh, n_steps=2, overlapped=False, transport=get_transport(backend)
+    )(tiles))
+    ovl = np.asarray(app.jitted(
+        mesh, n_steps=2, overlapped=True, transport=get_transport(backend)
+    )(tiles))
+    np.testing.assert_array_equal(ref, ovl)
+
+    want = app.single_rank_reference(world, 2)
+    got = app.gather(ovl)
+    if backend == "compressed":
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+def test_multistep_rolled_equals_iterated(world, devices8):
+    """fori_loop'd run == repeated single-step calls (double-buffer carry
+    correctness across timesteps)."""
+    app, mesh = _make("torus")
+    tiles = jnp.asarray(app.scatter(world))
+    rolled = np.asarray(app.jitted(mesh, n_steps=3, overlapped=True)(tiles))
+    one = app.jitted(mesh, n_steps=1, overlapped=True)
+    stepped = tiles
+    for _ in range(3):
+        stepped = one(stepped)
+    np.testing.assert_array_equal(rolled, np.asarray(stepped))
+
+
+def test_pallas_interpret_interior_bit_exact(world, devices8):
+    """The Pallas row-streaming kernel as the interior update (interpreter
+    off-TPU) stays bit-identical to the jnp reference schedule."""
+    app, mesh = _make("torus")
+    tiles = jnp.asarray(app.scatter(world))
+    ref = np.asarray(app.jitted(mesh, n_steps=2, overlapped=False)(tiles))
+    app_p = dataclasses.replace(app, interpret=True)
+    ovl = np.asarray(app_p.jitted(mesh, n_steps=2, overlapped=True)(tiles))
+    np.testing.assert_array_equal(ref, ovl)
+
+
+# ---------------------------------------------------------------------------
+# costing: traced tagged stats == netsim prediction, exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("grid_name", sorted(GRIDS))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_halo_tagged_stats_match_prediction(grid_name, backend, world,
+                                            devices8):
+    app, mesh = _make(grid_name)
+    tiles = jnp.asarray(app.scatter(world))
+    t = get_transport(backend)
+    np.asarray(app.jitted(mesh, n_steps=2, overlapped=True, transport=t)(tiles))
+    nx, ny = world.shape[0] // app.grid[0], world.shape[1] // app.grid[1]
+    pred_key = "compressed" if backend == "compressed" else backend
+    steps, nbytes = app.halo_schedule.predicted_stats(
+        (nx, ny), transport=pred_key
+    )
+    got = t.stats.tag_counts(HALO_TAG)
+    assert got == (2 * steps, 2 * nbytes), (
+        f"{backend}@{grid_name}: traced {got} != 2x predicted "
+        f"({steps}, {nbytes})"
+    )
+    # the tag accounts everything this run moved: no untagged residue
+    assert t.stats.steps == got[0]
+    assert t.stats.bytes_moved == got[1]
+
+
+def test_halo_pairs_single_source_of_truth():
+    """netsim's pure-python pair builder == the traced halo_perm wiring."""
+    for grid in [(1, 8), (2, 4), (3, 3)]:
+        for drx, dry in [(-1, 0), (1, 0), (0, -1), (0, 1)]:
+            assert halo_pairs(grid, drx, dry) == halo_perm(grid, drx, dry)
+
+
+def test_halo_plan_auto_and_tuner_cells(world, devices8):
+    app, mesh = _make("torus")
+    plan = app.comm.plan("halo", 4096)
+    assert isinstance(plan, Plan)
+    assert plan.wire == "raw", "lossy halos must never be a tuned choice"
+    assert plan.n_chunks == 1
+    # plan="auto" runs and matches the static schedule bit for bit
+    app_auto = dataclasses.replace(app, plan="auto")
+    tiles = jnp.asarray(app.scatter(world))
+    got = np.asarray(app_auto.jitted(mesh, n_steps=2, overlapped=True)(tiles))
+    ref = np.asarray(app.jitted(mesh, n_steps=2, overlapped=False)(tiles))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_predicted_time_model_shapes(devices8):
+    """LinkModel halo predictions behave physically: positive, monotone in
+    slab size, and the int8 wire only wins once serialisation dominates."""
+    app, _ = _make("torus")
+    small = predict_halo_time(app.comm, grid=app.grid, shape=(16, 16))
+    big = predict_halo_time(app.comm, grid=app.grid, shape=(1024, 1024))
+    assert 0 < small < big
+    from repro.netsim import LinkModel
+
+    m = LinkModel.default_v5e()
+    assert m.overlapped_step_time(3.0, 2.0) == 3.0
+    assert m.serial_step_time(3.0, 2.0) == 5.0
+    # a tiny slab is latency-bound: the compressed wire pays the codec
+    small_i8 = predict_halo_time(
+        app.comm, grid=app.grid, shape=(16, 16), wire="int8"
+    )
+    assert small_i8 > small
+    # a huge slab is serialisation-bound: the compressed wire wins
+    big_i8 = predict_halo_time(
+        app.comm, grid=app.grid, shape=(65536, 65536), wire="int8"
+    )
+    big_raw = predict_halo_time(
+        app.comm, grid=app.grid, shape=(65536, 65536)
+    )
+    assert big_i8 < big_raw
+
+
+def test_halo_exchange_invalid_grid():
+    from repro.core import Communicator
+
+    comm = Communicator.create("x", (8,))
+    with pytest.raises(AssertionError):
+        HaloExchange(comm=comm, grid=(3, 3))

@@ -1,0 +1,87 @@
+"""ServeEngine batching-path tests (serving/engine.py).
+
+The engine decodes a fixed-width wave of slots in lock-step; these tests
+pin the properties the dry-run shapes rely on: slot independence (a
+request's tokens don't depend on its wave-mates), prompt replay across
+different prompt lengths, eos early-exit, and queue draining over
+multiple waves.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke
+from repro.mesh.api import ParallelCtx
+from repro.models import init_lm
+from repro.serving import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = smoke(get_arch("yi-6b"))
+    params = init_lm(jax.random.PRNGKey(0), cfg, ParallelCtx())
+    return cfg, params
+
+
+def _run(cfg, params, prompts, *, batch_slots, max_new=4, eos=None,
+         max_steps=200):
+    eng = ServeEngine(cfg, params, batch_slots=batch_slots, capacity=64,
+                      eos=eos)
+    for uid, prompt in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=list(prompt), max_new=max_new))
+    done = eng.run(max_steps=max_steps)
+    return {r.uid: r for r in done}
+
+
+def test_batched_slots_are_independent(engine_setup):
+    """A request's output is the same whether it decodes alone or batched
+    with a different wave-mate — the batching path must not leak state
+    across slots (per-slot caches, per-slot prompt cursors)."""
+    cfg, params = engine_setup
+    pa, pb = [5, 7, 9], [11, 3]
+    solo = _run(cfg, params, [pa], batch_slots=1)
+    duo = _run(cfg, params, [pa, pb], batch_slots=2)
+    assert duo[0].out == solo[0].out
+    solo_b = _run(cfg, params, [pb], batch_slots=1)
+    assert duo[1].out == solo_b[0].out
+
+
+def test_unequal_prompt_lengths_replay_correctly(engine_setup):
+    """Wave-mates with different prompt lengths: the shorter one starts
+    sampling while the longer one is still replaying its prompt."""
+    cfg, params = engine_setup
+    short, long = [4], [4, 8, 15, 16, 23]
+    duo = _run(cfg, params, [short, long], batch_slots=2, max_new=3)
+    assert len(duo[0].out) == 3 and len(duo[1].out) == 3
+    solo = _run(cfg, params, [long], batch_slots=1, max_new=3)
+    assert duo[1].out == solo[0].out
+
+
+def test_queue_drains_over_multiple_waves(engine_setup):
+    cfg, params = engine_setup
+    prompts = [[i + 1, i + 2] for i in range(5)]  # 3 waves of <= 2 slots
+    done = _run(cfg, params, prompts, batch_slots=2, max_new=2,
+                max_steps=400)
+    assert sorted(done) == [0, 1, 2, 3, 4]
+    for r in done.values():
+        assert r.done and len(r.out) == 2
+        assert all(0 <= t < cfg.padded_vocab for t in r.out)
+    # wave admission resets position: identical prompts in different waves
+    # produce identical continuations
+    same = _run(cfg, params, [[9, 9], [9, 9], [9, 9]], batch_slots=1,
+                max_new=2, max_steps=400)
+    assert same[0].out == same[1].out == same[2].out
+
+
+def test_eos_early_exit(engine_setup):
+    cfg, params = engine_setup
+    probe = _run(cfg, params, [[5, 7]], batch_slots=1, max_new=4)
+    toks = probe[0].out
+    assert len(toks) == 4
+    # stop at the first occurrence of the chosen eos token instead of
+    # decoding out to max_new
+    eos = int(toks[1])
+    done = _run(cfg, params, [[5, 7]], batch_slots=1, max_new=4, eos=eos)
+    assert done[0].out == toks[:toks.index(eos) + 1]
+    assert done[0].done
