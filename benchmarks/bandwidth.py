@@ -26,7 +26,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import Communicator, Topology, make_test_mesh, stream_p2p
+from repro.channels import open_channel
+from repro.core import Communicator, Topology, make_test_mesh
 from repro.core.streaming import _mask_sel, _pvary
 from repro.netsim import calibrate, predict_transport_stats
 
@@ -64,10 +65,10 @@ def run(transports=("static", "packet"), validate_sim=False):
             bw_stg = elems * 4 / model_stg / 1e9
             for tname in transports:
                 f_smi = jax.jit(jax.shard_map(
-                    lambda v, tn=tname: stream_p2p(
-                        v[0], src=0, dst=dst, comm=comm, n_chunks=n_chunks,
+                    lambda v, tn=tname: open_channel(
+                        comm, src=0, dst=dst, port=None, n_chunks=n_chunks,
                         transport=make_bench_transport(tn, pkt_elems=PACKET_BENCH_ELEMS),
-                    )[None],
+                    ).transfer(v[0])[None],
                     mesh=mesh, in_specs=P("x"), out_specs=P("x")))
                 # more timing iterations for the rows that feed the drift
                 # gate: the 2x tolerance must gate schedule drift, not a

@@ -3,7 +3,9 @@
 Compared: SMI streamed (pipelined chain, the paper's linear scheme) under
 each transport backend (``--transport static,packet,fused``), host-staged
 (serial bulk sends — the MPI+OpenCL analogue), and the beyond-paper
-binomial tree.  The paper's observations to reproduce: streamed collectives
+binomial tree.  The streamed variants go through the channel API
+(``open_bcast_channel`` etc., DESIGN.md §9): the transport backend rides
+on the transient channel's spec, not a per-call kwarg.  The paper's observations to reproduce: streamed collectives
 beat staged for all sizes; topology (torus vs bus) barely matters for the
 streamed version; trees win at small sizes.  The per-backend sweep adds the
 repo's own claim: one collective call site, three interchangeable
@@ -21,15 +23,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.channels import (
+    open_allreduce_channel,
+    open_bcast_channel,
+    open_reduce_channel,
+)
 from repro.core import (
     Communicator,
     Topology,
     make_test_mesh,
     staged_bcast,
     staged_reduce,
-    stream_allreduce,
-    stream_bcast,
-    stream_reduce,
     tree_bcast,
     tree_reduce,
 )
@@ -63,10 +67,10 @@ def run(transports=("static", "packet", "fused", "compressed"),
             variants = {}
             for tname in transports:
                 variants[f"smi[{tname}]"] = (
-                    lambda v, c=comm, tn=tname: stream_bcast(
-                        v[0].reshape(n_chunks, -1), c, root=0,
-                        n_chunks=n_chunks, transport=make_bench_transport(tn),
-                    ).reshape(1, -1)
+                    lambda v, c=comm, tn=tname: open_bcast_channel(
+                        c, root=0, port=None, n_chunks=n_chunks,
+                        transport=make_bench_transport(tn),
+                    ).transfer(v[0].reshape(n_chunks, -1)).reshape(1, -1)
                 )
             variants["staged"] = lambda v, c=comm: staged_bcast(v[0], c, root=0)[None]
             variants["tree"] = lambda v, c=comm: tree_bcast(v[0], c, root=0)[None]
@@ -95,10 +99,10 @@ def run(transports=("static", "packet", "fused", "compressed"),
             rvariants = {}
             for tname in transports:
                 rvariants[f"smi[{tname}]"] = (
-                    lambda v, c=comm, tn=tname: stream_reduce(
-                        v[0].reshape(n_chunks, -1), c, root=0,
-                        n_chunks=n_chunks, transport=make_bench_transport(tn),
-                    ).reshape(1, -1)
+                    lambda v, c=comm, tn=tname: open_reduce_channel(
+                        c, root=0, port=None, n_chunks=n_chunks,
+                        transport=make_bench_transport(tn),
+                    ).transfer(v[0].reshape(n_chunks, -1)).reshape(1, -1)
                 )
             rvariants["staged"] = lambda v, c=comm: staged_reduce(v[0], c, root=0)[None]
             rvariants["tree"] = lambda v, c=comm: tree_reduce(v[0], c, root=0)[None]
@@ -114,8 +118,9 @@ def run(transports=("static", "packet", "fused", "compressed"),
             # collective where the fused backend's kernel actually runs
             if topo == "torus":
                 for tname in transports:
-                    fn = (lambda v, c=comm, tn=tname: stream_allreduce(
-                        v[0], c, transport=make_bench_transport(tn))[None])
+                    fn = (lambda v, c=comm, tn=tname: open_allreduce_channel(
+                        c, port=None, transport=make_bench_transport(tn),
+                    ).transfer(v[0])[None])
                     f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
                                               out_specs=P("x")))
                     t = timeit(f, x)

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import Communicator, make_test_mesh, stream_p2p
+from repro.channels import open_channel
+from repro.core import Communicator, make_test_mesh
 from repro.core.streaming import _mask_sel, _pvary
 
 from .common import HBM_BW, csv_row, timeit
@@ -44,7 +45,9 @@ def run():
             mat = Ab[0]                      # rank0: A, rank1: B
             partial = mat @ xb               # both GEMVs run CONCURRENTLY
             partial = jnp.where(r == 0, ALPHA * partial, BETA * partial)
-            got = stream_p2p(partial, src=0, dst=1, comm=comm, n_chunks=8)
+            got = open_channel(
+                comm, src=0, dst=1, port=None, n_chunks=8
+            ).transfer(partial)
             y = jnp.where(r == 1, partial + got, _pvary(jnp.zeros_like(partial), comm))
             return y[None]
 

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import Communicator, Topology, make_test_mesh, stream_p2p
+from repro.channels import open_channel
+from repro.core import Communicator, Topology, make_test_mesh
 from repro.netsim import calibrate, predict_transport_stats
 
 from .common import V5E_MODEL, csv_row, timeit
@@ -33,7 +34,9 @@ def run(validate_sim=False):
     records = []
     for dst, hops in [(1, 1), (4, 4), (7, 7)]:
         f = jax.jit(jax.shard_map(
-            lambda v: stream_p2p(v[0], src=0, dst=dst, comm=comm, n_chunks=1)[None],
+            lambda v: open_channel(
+                comm, src=0, dst=dst, port=None, n_chunks=1
+            ).transfer(v[0])[None],
             mesh=mesh, in_specs=P("x"), out_specs=P("x")))
         t = timeit(f, x, iters=9 if validate_sim else 5)
         model = V5E_MODEL.p2p_time(elems * 4, hops, n_chunks=1)

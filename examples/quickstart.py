@@ -2,8 +2,10 @@
 
 Rank 0 opens a send channel and pushes N elements from inside its pipelined
 loop; rank 3 pops them as they arrive (pipeline latency = network hops).
-Then the same message moves with the transfer-level streamed p2p, and a
-streamed broadcast shares it with every rank.
+Then the same message moves with a whole-message channel transfer, a
+transient broadcast channel shares it with every rank, and the last section
+opens the same channels over the int8 compressed-link backend — the
+channel's spec carries the transport, so no call site changes.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,17 +19,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.channels import (
+    default_channel_spec,
+    open_bcast_channel,
+    open_channel,
+)
 from repro.core import (
     Communicator,
     Topology,
     bcast,
     make_test_mesh,
-    open_channel,
-    pop,
-    push,
     pvary,
-    stream_bcast,
-    stream_p2p,
 )
 
 
@@ -40,21 +42,23 @@ def main():
     print(f"channel {SRC} -> {DST}: {hops} hops over {comm.topology.name}")
 
     # ---- element-level: SMI_Open_channel / SMI_Push / SMI_Pop ----------
+    # Opening claims port 0 on the communicator's allocator; leaving the
+    # `with` scope releases it (two live channels cannot share a port).
     def spmd(dummy):
-        chan = open_channel(comm, count=N, src=SRC, dst=DST,
-                            elem_shape=(), dtype=jnp.float32)
-        acc = pvary(jnp.zeros((N,), jnp.float32), comm)
+        with open_channel(comm, count=N, src=SRC, dst=DST, port=0,
+                          elem_shape=(), dtype=jnp.float32) as chan:
+            acc = pvary(jnp.zeros((N,), jnp.float32), comm)
 
-        def body(i, carry):
-            chan, acc = carry
-            data = jnp.sin(i.astype(jnp.float32))       # "compute" (Listing 1)
-            chan = push(chan, data)                      # SMI_Push at rank 0
-            chan, val, valid = pop(chan)                 # SMI_Pop at rank 3
-            slot = jnp.maximum(i - (hops - 1), 0)
-            acc = jnp.where(valid, acc.at[slot].set(val), acc)
-            return chan, acc
+            def body(i, carry):
+                chan, acc = carry
+                data = jnp.sin(i.astype(jnp.float32))   # "compute" (Listing 1)
+                chan = chan.push(data)                  # SMI_Push at rank 0
+                chan, val, valid = chan.pop()           # SMI_Pop at rank 3
+                slot = jnp.maximum(i - (hops - 1), 0)
+                acc = jnp.where(valid, acc.at[slot].set(val), acc)
+                return chan, acc
 
-        chan, acc = jax.lax.fori_loop(0, N + hops - 1, body, (chan, acc))
+            chan, acc = jax.lax.fori_loop(0, N + hops - 1, body, (chan, acc))
         return acc[None] + 0 * dummy[:, :1]
 
     out = jax.jit(jax.shard_map(
@@ -64,19 +68,22 @@ def main():
     np.testing.assert_allclose(got, want, rtol=1e-6)
     print(f"push/pop pipeline delivered {N} elements:", got[:5], "...")
 
-    # ---- transfer-level + streamed broadcast ----------------------------
+    # ---- transfer-level: whole messages over transient channels ---------
     msg = jnp.arange(8 * 64, dtype=jnp.float32).reshape(8, 64)
 
     def transfer(v):
-        y = stream_p2p(v[0], src=SRC, dst=DST, comm=comm, n_chunks=8)
-        b = stream_bcast(y, comm, root=DST, n_chunks=4)
+        y = open_channel(comm, src=SRC, dst=DST, port=None,
+                         n_chunks=8).transfer(v[0])
+        b = open_bcast_channel(comm, root=DST, port=None,
+                               n_chunks=4).transfer(y)
         return b[None]
 
     out = jax.jit(jax.shard_map(
         transfer, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(msg)
     for r in range(8):
         np.testing.assert_allclose(np.asarray(out[r]), np.asarray(msg[SRC]))
-    print("streamed p2p + broadcast: all 8 ranks hold rank-0's message ✓")
+    print("channel transfer + broadcast channel: all 8 ranks hold "
+          "rank-0's message ✓")
 
     # ---- one-line autotuned collective ---------------------------------
     # bcast() consults the netsim tuning table (DESIGN.md §6): the link
@@ -91,13 +98,15 @@ def main():
     print(f"autotuned bcast ✓ (netsim chose {plan})")
 
     # ---- compressed links: comm_mode="smi:compressed" -------------------
-    # The same collective call sites run over the int8 compressed-link
-    # backend (blockwise scales + error feedback, DESIGN.md §7): models
-    # select it with comm_mode="smi:compressed"; here the communicator's
-    # transport string does the same for a bare collective.
-    ccomm = comm.with_transport("compressed")
+    # The launch-layer comm_mode strings map onto channel specs: the spec
+    # carries the int8 compressed-link backend (blockwise scales + error
+    # feedback, DESIGN.md §7), and the same broadcast-channel call site
+    # moves over it unchanged.
+    spec = default_channel_spec(comm, "smi:compressed")
     out = jax.jit(jax.shard_map(
-        lambda v: stream_bcast(v[0], ccomm, root=SRC, n_chunks=4)[None],
+        lambda v: open_bcast_channel(
+            comm, root=SRC, port=None, transport=spec.transport, n_chunks=4,
+        ).transfer(v[0])[None],
         mesh=mesh, in_specs=P("x"), out_specs=P("x")))(msg)
     bound = float(np.max(np.abs(np.asarray(msg[SRC])))) / 254 * 1.05
     for r in range(8):

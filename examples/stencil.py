@@ -30,7 +30,10 @@ def main(modes=("smi", "smi:packet", "smi:fused", "smi:compressed")):
     world = np.random.RandomState(0).randn(256, 256).astype(np.float32)
     want = DistributedStencil.single_rank_reference(world, steps)
     for mode in modes:
+        # comm_mode maps onto the halo channel's spec (DESIGN.md §9): the
+        # "exchange" ChannelSpec carries the selected transport backend
         app = DistributedStencil.create(grid, comm_mode=mode)
+        assert app.halo_schedule.spec.kind == "exchange"
         tiles = jnp.asarray(app.scatter(world))
         ref = app.gather(np.asarray(
             app.jitted(n_steps=steps, overlapped=False)(tiles)

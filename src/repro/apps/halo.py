@@ -21,6 +21,13 @@ timestep.  :class:`HaloExchange` packages that schedule as an object the
   table which backend should move a slab of this size on this topology
   (``Communicator.plan("halo", nbytes)``; always a raw wire — lossy halos
   are an explicit user choice, never a tuned one).
+
+The schedule's communication configuration rides in a
+:class:`~repro.channels.ChannelSpec` of kind ``"exchange"`` (:attr:`spec`):
+the same open-time descriptor the channel API uses everywhere else carries
+the halo wire's transport backend, tuning plan, and the ``"halo"`` stats
+tag — one exchange is one anonymous-port transient channel over the
+neighbour links.
 """
 
 from __future__ import annotations
@@ -29,6 +36,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..channels.spec import ChannelSpec
 from ..core.comm import Communicator
 from ..core.overlap import (
     halo_exchange_2d_finish,
@@ -64,6 +72,16 @@ class HaloExchange:
 
     # -- transport resolution ---------------------------------------------
 
+    @property
+    def spec(self) -> ChannelSpec:
+        """This schedule's communication config as a transient-channel
+        descriptor: an anonymous-port ``"exchange"`` channel tagged
+        ``"halo"`` over the schedule's transport/plan."""
+        return ChannelSpec(
+            comm=self.comm, kind="exchange", port=None,
+            transport=self.transport, plan=self.plan, tag=HALO_TAG,
+        )
+
     def slab_nbytes(self, tile_shape, dtype=np.float32) -> int:
         """Bytes of the largest halo slab of a ``tile_shape`` tile (the
         message size the tuner's ``halo`` cells are keyed on)."""
@@ -74,20 +92,19 @@ class HaloExchange:
 
     def resolve_transport(self, tile=None, transport=None):
         """The Transport instance one exchange of ``tile`` uses: explicit
-        argument > this schedule's ``transport`` > the tuned ``halo`` plan
+        argument > the spec's ``transport`` > the tuned ``halo`` plan
         (``plan="auto"``) > the communicator's default backend."""
         from ..transport.registry import resolve_transport
 
+        spec = self.spec
         if transport is not None:
             return resolve_transport(transport, self.comm)
-        if self.transport is not None:
-            return resolve_transport(self.transport, self.comm)
-        if self.plan == "auto" and tile is not None:
+        if spec.transport is None and spec.plan == "auto" and tile is not None:
             p = self.comm.plan(
                 "halo", self.slab_nbytes(tile.shape, tile.dtype)
             )
-            return resolve_transport(p.transport_key, self.comm)
-        return resolve_transport(None, self.comm)
+            return spec.replace(transport=p.transport_key).resolve()
+        return spec.resolve()
 
     # -- the exchange ------------------------------------------------------
 
@@ -96,7 +113,8 @@ class HaloExchange:
         (tagged ``"halo"`` in the backend's stats)."""
         return halo_exchange_2d_start(
             x, self.comm, grid=self.grid, halo=self.halo,
-            transport=self.resolve_transport(x, transport), tag=HALO_TAG,
+            transport=self.resolve_transport(x, transport),
+            tag=self.spec.stats_tag,
         )
 
     def finish(self, x, inflight):

@@ -73,24 +73,24 @@ class DistributedStencil:
                transport=None, plan=None, use_pallas=None, interpret=False):
         """Build the app over a fresh communicator (row-major torus over
         ``axis_names``) unless one is passed.  ``comm_mode`` accepts the
-        launch-layer strings (``"smi:compressed"`` etc.) and resolves to
-        the named transport backend."""
-        if comm_mode is not None:
-            from ..transport.registry import resolve_comm_mode
-
-            base, backend = resolve_comm_mode(comm_mode)
-            assert base == "smi", (
-                f"the distributed stencil streams halos over SMI transports; "
-                f"comm_mode {comm_mode!r} has base {base!r}"
-            )
-            assert transport is None, "pass comm_mode or transport, not both"
-            transport = backend
+        launch-layer strings (``"smi:compressed"`` etc.), mapped onto the
+        halo channel's spec through
+        :func:`repro.channels.default_channel_spec`."""
         RX, RY = grid
         if comm is None:
             if axis_names is None:
                 axis_names = ("gx", "gy") if RX > 1 and RY > 1 else ("gx",)
             sizes = grid if len(axis_names) == 2 else (RX * RY,)
             comm = Communicator.create(axis_names, sizes)
+        if comm_mode is not None:
+            from ..channels import default_channel_spec
+            from .halo import HALO_TAG
+
+            assert transport is None, "pass comm_mode or transport, not both"
+            spec = default_channel_spec(
+                comm, comm_mode, kind="exchange", port=None, tag=HALO_TAG,
+            )
+            transport = spec.transport
         return DistributedStencil(
             comm=comm, grid=(RX, RY), transport=transport, plan=plan,
             use_pallas=use_pallas, interpret=interpret,

@@ -1,0 +1,67 @@
+"""First-class SMI channels: the user-facing communication API.
+
+The paper's programming model is *channels all the way down* (§2.2–§2.4):
+programs open send/recv channels and transient collective channels
+(``SMI_Open_bcast_channel``, ``SMI_Open_reduce_channel``, ...) and
+communicate element-by-element with ``SMI_Push`` / ``SMI_Pop``, which is
+what lets communication fuse into pipelined kernels.  This package is that
+API for the TPU rendering:
+
+* :class:`ChannelSpec` — the single carrier of communication config
+  (peer/root, port, transport backend, wire format, stats tag, tuning
+  plan), replacing the historic per-call kwarg sprawl;
+* :func:`open_channel` — p2p channels with :meth:`~Channel.push` /
+  :meth:`~Channel.pop` element pipelining (latency = routed hops) and a
+  whole-message :meth:`~Channel.transfer`, all moving through the
+  channel's transport backend;
+* :func:`open_bcast_channel` / :func:`open_reduce_channel` /
+  :func:`open_scatter_channel` / :func:`open_gather_channel` /
+  :func:`open_allreduce_channel` — transient collective channels whose
+  ``transfer`` lowers onto the streamed collective schedules,
+  bit-identical to the direct calls on every transport backend;
+* :data:`PORTS` — the default :class:`~repro.core.comm.PortAllocator`
+  every ``open_*`` claims its port from; channels are context managers
+  and release the port on close/scope exit;
+* :func:`default_channel_spec` — ``comm_mode="smi:<backend>"`` strings
+  mapped onto their channel spec.
+
+The legacy ``stream_*`` entry points in :mod:`repro.core` remain as thin
+shims that open a transient (anonymous-port) channel internally; see
+DESIGN.md §9 for the migration table.
+"""
+
+from .spec import KINDS, ChannelSpec, default_channel_spec
+from .channel import (
+    PORTS,
+    Channel,
+    channel_transfer,
+    open_channel,
+    pop,
+    push,
+)
+from .collective import (
+    CollectiveChannel,
+    open_allreduce_channel,
+    open_bcast_channel,
+    open_gather_channel,
+    open_reduce_channel,
+    open_scatter_channel,
+)
+
+__all__ = [
+    "KINDS",
+    "ChannelSpec",
+    "default_channel_spec",
+    "PORTS",
+    "Channel",
+    "channel_transfer",
+    "open_channel",
+    "pop",
+    "push",
+    "CollectiveChannel",
+    "open_allreduce_channel",
+    "open_bcast_channel",
+    "open_gather_channel",
+    "open_reduce_channel",
+    "open_scatter_channel",
+]

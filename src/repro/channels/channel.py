@@ -1,0 +1,273 @@
+"""Point-to-point transient channels (paper Listing 1, §2.2–§2.3).
+
+A :class:`Channel` is traced state — a 1-deep pipe register per rank on
+the route plus progress counters — described by a static
+:class:`~repro.channels.spec.ChannelSpec`.  Element-level :meth:`push` /
+:meth:`pop` advance the pipeline one hop-step per pop, so arrival latency
+equals the routed hop count (paper Tab. 3) and a consumer loop gates its
+tail on the returned ``valid`` bit (pipeline bubbles).  Whole-message
+:meth:`transfer` hands the payload to the chunk-pipelined transport engine.
+
+Both paths move bytes through the channel's *transport backend* — the
+spec's key/instance, or the communicator's default — so packet-routed and
+int8-compressed p2p channels exist: a pop over ``transport="packet"`` runs
+the dynamic router for every hop-step, and every step is accounted under
+the channel's stats tag (``netsim.predict_channel_stats`` matches the
+tagged counters to the byte).
+
+Opening claims the spec's port through the communicator's
+:class:`~repro.core.comm.PortAllocator` (``port=None`` = anonymous, no
+claim); closing — explicitly or by ``with`` scope — releases it.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.comm import Communicator, PortAllocator
+from .spec import ChannelSpec
+
+#: the package-level default allocator open_* claims ports from
+PORTS = PortAllocator()
+
+
+@contextmanager
+def _tagged(t, tag: str | None):
+    """Account the block under ``tag`` (no-op for untagged channels)."""
+    if tag is None:
+        yield t
+    else:
+        with t.tagged(tag):
+            yield t
+
+
+def _claim(spec: ChannelSpec, allocator) -> ChannelSpec:
+    """Claim the spec's port (owner = the spec, so the claim lapses when
+    the opening trace is garbage-collected) and remember the allocator."""
+    if spec.port is None:
+        return spec
+    alloc = allocator if allocator is not None else PORTS
+    spec = spec.replace(allocator=alloc)
+    alloc.claim(spec.comm, spec.port, owner=spec)
+    return spec
+
+
+def _mask_sel(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _pvary(x, comm):
+    from ..core.streaming import _pvary as f
+
+    return f(x, comm)
+
+
+class _ChannelBase:
+    """close / context-manager plumbing shared by every channel kind."""
+
+    def close(self):
+        """Release the channel's port claim (idempotent)."""
+        self.spec.release_port()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def _resolve_transfer(self, x, n_chunks, op: str):
+        """(transport, n_chunks) for one whole-message transfer, honouring
+        the spec's plan exactly as the legacy per-call kwargs did: "auto"
+        consults the tuning table; a tuned int8 wire falls back to raw for
+        integer payloads; an explicit spec transport always wins over the
+        plan's backend."""
+        spec = self.spec
+        nc = n_chunks if n_chunks is not None else spec.n_chunks
+        plan = spec.plan
+        if plan is None:
+            return spec.resolve(), nc
+        import dataclasses
+
+        from ..netsim.tune import Plan
+
+        if not isinstance(plan, Plan):
+            assert plan == "auto", (
+                f"plan must be 'auto', None or a Plan; got {plan!r}"
+            )
+            nbytes = x.size * x.dtype.itemsize
+            plan = spec.comm.plan(op, int(nbytes))
+        if plan.wire != "raw" and not jnp.issubdtype(x.dtype, jnp.floating):
+            # integer payloads must move exactly: same plan, raw wire
+            plan = dataclasses.replace(plan, wire="raw")
+        if spec.transport is None and spec.wire == "raw":
+            t = spec.replace(transport=plan.transport_key).resolve()
+        else:
+            t = spec.resolve()
+        return t, plan.clamp_chunks(x.shape[0])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Channel(_ChannelBase):
+    """Traced p2p channel state: a 1-deep pipe register per rank on the
+    route.  ``pushed``/``popped`` count progress; ``pipe`` holds the
+    in-flight element at this rank; ``valid`` (f32 0/1 so it rides every
+    wire format, including the int8 compressed link, exactly) tags
+    pipeline bubbles.  The spec (static) rides in the pytree aux data, so
+    channels can be loop carries."""
+
+    spec: ChannelSpec
+    pipe: jax.Array
+    valid: jax.Array  # f32 scalar 0/1: pipe holds a live element
+    pushed: jax.Array  # i32 scalar
+    popped: jax.Array  # i32 scalar
+
+    def tree_flatten(self):
+        return (self.pipe, self.valid, self.pushed, self.popped), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, leaves):
+        return cls(spec, *leaves)
+
+    # -- element level -------------------------------------------------------
+
+    def push(self, elem: jax.Array) -> "Channel":
+        """SMI_Push: stage ``elem`` into the pipe at the source rank.
+
+        Non-blocking in trace terms; the element starts moving on the next
+        :meth:`pop` (the schedule's pipeline advance).  Pipelines to one
+        advance per loop iteration — the ii=1 requirement of §3.1.1.
+        """
+        r = self.spec.comm.rank()
+        at_src = r == self.spec.src
+        new_pipe = _mask_sel(
+            at_src, jnp.asarray(elem, self.pipe.dtype), self.pipe
+        )
+        new_valid = jnp.where(at_src, 1.0, self.valid).astype(self.valid.dtype)
+        return Channel(
+            self.spec,
+            new_pipe,
+            new_valid,
+            self.pushed + jnp.where(at_src, 1, 0).astype(jnp.int32),
+            self.popped,
+        )
+
+    def pop(self):
+        """SMI_Pop: advance the channel pipeline one hop-step and extract.
+
+        Returns ``(chan', value, valid)``: after ``hops`` advances the
+        element pushed first arrives, so a consumer loop runs
+        ``count + hops - 1`` iterations and gates on ``valid`` — exactly a
+        hardware pipeline with latency = network distance (paper Tab. 3).
+        The hop-step moves through the channel's transport backend and is
+        accounted under its stats tag.  A bounded channel (``count`` not
+        None) delivers at most ``count`` valid elements — extra pops gate
+        invalid, the documented min(count, pushed) validity cap.
+        """
+        spec = self.spec
+        r = spec.comm.rank()
+        pairs = spec.comm.path_perm(spec.path)
+        t = spec.step_transport()
+        with _tagged(t, spec.stats_tag):
+            moved, moved_valid = t.permute(
+                (self.pipe, self.valid), spec.comm, pairs
+            )
+        at_dst = r == spec.dst
+        value = moved
+        valid = jnp.logical_and(at_dst, moved_valid > 0.5)
+        if spec.count is not None:
+            valid = jnp.logical_and(
+                valid, self.popped < jnp.int32(spec.count)
+            )
+        new = Channel(
+            spec,
+            moved,
+            moved_valid,
+            self.pushed,
+            self.popped + jnp.where(valid, 1, 0).astype(jnp.int32),
+        )
+        return new, value, valid
+
+    # -- transfer level ------------------------------------------------------
+
+    def transfer(self, x: jax.Array, n_chunks: int | None = None) -> jax.Array:
+        """Whole-message streamed transfer over this channel: ``x``@src
+        delivered to dst along the routed path through the channel's
+        transport backend (``n_chunks`` chunks in flight; the spec's plan
+        may pick backend and chunk count).  Equivalent to count/chunk
+        pushes + pops, dispatched to the pipelined transfer engine."""
+        spec = self.spec
+        t, nc = self._resolve_transfer(x, n_chunks, "p2p")
+        with _tagged(t, spec.stats_tag):
+            return t.p2p(x, src=spec.src, dst=spec.dst, comm=spec.comm,
+                         n_chunks=nc)
+
+
+def open_channel(
+    comm: Communicator,
+    *,
+    count: int | None = None,
+    src: int = 0,
+    dst: int = 0,
+    port: int | None = 0,
+    elem_shape=(),
+    dtype=jnp.float32,
+    transport=None,
+    wire: str = "raw",
+    tag: str | None = None,
+    plan=None,
+    n_chunks: int = 1,
+    allocator: PortAllocator | None = None,
+) -> Channel:
+    """SMI_Open_send_channel / SMI_Open_recv_channel.
+
+    Opening claims ``port`` on the communicator's allocator (two open
+    channels cannot share a port — the software analogue of two kernels
+    contending for one hardware FIFO; ``port=None`` skips the claim) and
+    creates the descriptor plus a zeroed pipe register; no communication
+    happens until elements flow (paper §3.3 eager protocol).  The spec
+    carries the channel's whole comm config — transport backend, wire
+    format, stats tag, tuning plan — replacing the legacy per-call kwargs.
+    """
+    spec = _claim(
+        ChannelSpec(
+            comm=comm, kind="p2p", count=count, src=src, dst=dst, port=port,
+            transport=transport, wire=wire, tag=tag, plan=plan,
+            n_chunks=n_chunks,
+        ),
+        allocator,
+    )
+    return Channel(
+        spec=spec,
+        pipe=_pvary(jnp.zeros(elem_shape, dtype), comm),
+        valid=_pvary(jnp.zeros((), jnp.float32), comm),
+        pushed=_pvary(jnp.zeros((), jnp.int32), comm),
+        popped=_pvary(jnp.zeros((), jnp.int32), comm),
+    )
+
+
+# -- module-level functional forms (the paper's C-style API; re-exported
+# through repro.core for existing call sites) --------------------------------
+
+
+def push(chan: Channel, elem: jax.Array) -> Channel:
+    """SMI_Push (functional form): see :meth:`Channel.push`."""
+    return chan.push(elem)
+
+
+def pop(chan: Channel):
+    """SMI_Pop (functional form): see :meth:`Channel.pop`."""
+    return chan.pop()
+
+
+def channel_transfer(chan, x: jax.Array, n_chunks: int | None = None):
+    """Whole-message convenience (functional form): see
+    :meth:`Channel.transfer`.  Dispatches through the channel's own
+    transport backend and stats tag — a channel opened over a packet or
+    compressed backend streams over exactly that wire."""
+    return chan.transfer(x, n_chunks=n_chunks)

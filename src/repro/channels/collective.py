@@ -1,0 +1,454 @@
+"""Transient collective channels (paper §2.4: SMI_Open_bcast/reduce/
+scatter/gather_channel).
+
+The paper's collectives are *channels*: a program opens a transient
+collective channel and pushes/pops elements through it; the root (or every
+rank) participates element-by-element, which is what lets a collective
+fuse into a pipelined kernel.  Rendered for the TPU schedule world:
+
+* **bcast** — the root pushes; every rank pops.  Fully pipelined chain
+  (one hop-step per pop, ii=1): the element pushed first reaches ring
+  distance d after d pops, validity travels in-band as an f32 flag so
+  pipeline bubbles (pops without pushes) gate cleanly.
+* **reduce** — every rank pushes its contribution; the root pops reduced
+  elements.  Pipelined chain toward the root with a P-deep contribution
+  FIFO per rank (the paper's credit window): the farthest rank injects,
+  each rank folds its matching element into the passing stream, the root
+  delivers after P-1 hop-steps.
+* **scatter / gather / allreduce** — round channels: each pop runs one
+  element-sized round of the corresponding streamed schedule (the paper's
+  sequentially-coordinated scatter/gather; ring RS+AG for allreduce).
+  Pushes are SPMD-lockstep (every rank traces the same push calls), so
+  validity gates on the uniform call count.
+
+Every kind also provides the whole-message :meth:`CollectiveChannel.
+transfer`, which lowers onto the existing ``stream_*`` schedules (or the
+autotuned dispatchers when the spec carries a plan) — bit-identical to
+calling them directly, on every transport backend.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.comm import Communicator, PortAllocator
+from .channel import _ChannelBase, _claim, _mask_sel, _pvary, _tagged
+from .spec import ChannelSpec
+
+
+def _i32(pred):
+    return jnp.where(pred, 1, 0).astype(jnp.int32)
+
+
+def _f32flag(pred):
+    return jnp.where(pred, 1.0, 0.0).astype(jnp.float32)
+
+
+def _take(buf, i):
+    return jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class CollectiveChannel(_ChannelBase):
+    """Traced collective-channel state; layout depends on ``spec.kind``
+    (see the module docstring).  ``pushed``/``popped`` count accepted
+    pushes / valid deliveries; the spec rides in the pytree aux data so
+    collective channels can be loop carries, exactly like p2p channels.
+    close / ``with``-scope lifecycle comes from the shared
+    :class:`~repro.channels.channel._ChannelBase`."""
+
+    spec: ChannelSpec
+    state: tuple
+    pushed: jax.Array  # i32: accepted pushes so far at this rank
+    popped: jax.Array  # i32: valid deliveries at this rank
+
+    def tree_flatten(self):
+        return (self.state, self.pushed, self.popped), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, leaves):
+        return cls(spec, *leaves)
+
+    def _limit(self):
+        """Deliverable-element bound: pushes so far, capped by count."""
+        if self.spec.count is None:
+            return self.pushed
+        return jnp.minimum(jnp.int32(self.spec.count), self.pushed)
+
+    def _op(self):
+        return self.spec.op if self.spec.op is not None else jnp.add
+
+    # ------------------------------------------------------------- push
+
+    def push(self, elem: jax.Array) -> "CollectiveChannel":
+        """SMI_Push: stage one element into the channel.
+
+        bcast: the root's element is the payload (other ranks' staged
+        copies are ignored); reduce: every rank's element is its
+        contribution; scatter: the root pushes a (P,)+elem_shape row (one
+        element per destination); gather/allreduce: every rank pushes its
+        element.  SPMD: every rank traces every push — masking selects the
+        live role.
+
+        Non-blocking with a credit window (the paper's §3.3 P-deep FIFO):
+        when this rank's window is full — pushes have outrun consumption by
+        the buffer depth — the element is *refused* (not staged, not
+        counted in ``pushed``), the trace-level rendering of SMI_Push
+        backpressure.  A refusal can never silently overwrite an element
+        the schedule has not consumed yet.  ``pushed`` therefore counts
+        *accepted* pushes at this rank; in the lockstep one-push-one-pop
+        loops of the paper's listings the window never fills and the count
+        stays uniform.
+        """
+        kind = self.spec.kind
+        P = self.spec.comm.size
+        if kind in ("bcast", "reduce"):
+            # consumption pointer of this rank's FIFO: the root/injector
+            # reads slots at `sent`; a reduce rank folds slots at `folded`
+            # (exactly one of the two advances on any given rank)
+            consumed = (self.state[1] if kind == "bcast"
+                        else self.state[3] + self.state[4])
+            ok = (self.pushed - consumed) < P
+            buf = self.state[0]
+            staged = jax.lax.dynamic_update_index_in_dim(
+                buf, jnp.asarray(elem, buf.dtype), self.pushed % P, 0
+            )
+            state = (_mask_sel(ok, staged, buf),) + self.state[1:]
+        else:  # scatter / gather / allreduce: 1-deep staging, one
+            # element-sized schedule round (`state[1]`) consumes it
+            ok = (self.pushed - self.state[1]) < 1
+            staged = jnp.asarray(elem, self.state[0].dtype)
+            state = (_mask_sel(ok, staged, self.state[0]),) + self.state[1:]
+        return CollectiveChannel(
+            self.spec, state, self.pushed + _i32(ok), self.popped
+        )
+
+    # ------------------------------------------------------------- pop
+
+    def pop(self):
+        """SMI_Pop: advance the collective pipeline one step and extract.
+
+        Returns ``(chan', value, valid)``.  bcast: ``value`` is the next
+        broadcast element (every rank, after its pipeline latency);
+        reduce: the next reduced element (root only); scatter: this rank's
+        element of the next pushed row; gather: the (P,)-row of pushed
+        elements (root only); allreduce: the next reduced element (every
+        rank).  ``valid`` gates warm-up, drain and pipeline bubbles.
+        """
+        return getattr(self, f"_pop_{self.spec.kind}")()
+
+    # bcast: pipelined chain, validity in-band ---------------------------
+
+    def _pop_bcast(self):
+        spec = self.spec
+        comm, root = spec.comm, spec.root
+        P, r = comm.size, comm.rank()
+        buf, sent, up, up_v, down, down_v = self.state
+        t = spec.step_transport()
+
+        from ..core.collectives import _line_perms
+
+        is_line = comm.topology.dims is None
+        if is_line:
+            up_pairs, down_pairs = _line_perms(comm, root)
+        else:
+            up_pairs, down_pairs = comm.ring_perm(+1), None
+
+        at_root = r == root
+        avail = sent < self._limit()
+        inj_ok = jnp.logical_and(at_root, avail)
+        inj = _take(buf, sent % P)
+
+        # the root always overwrites its pipe registers (injection or
+        # bubble) so stale elements can never recirculate around the wrap
+        reg_u = _mask_sel(at_root, _mask_sel(inj_ok, inj, jnp.zeros_like(up)),
+                          up)
+        reg_uv = jnp.where(at_root, _f32flag(inj_ok), up_v)
+        with _tagged(t, spec.stats_tag):
+            moved_u, moved_uv = t.permute((reg_u, reg_uv), comm, up_pairs)
+            if down_pairs is not None:
+                reg_d = _mask_sel(
+                    at_root, _mask_sel(inj_ok, inj, jnp.zeros_like(down)),
+                    down,
+                )
+                reg_dv = jnp.where(at_root, _f32flag(inj_ok), down_v)
+                moved_d, moved_dv = t.permute((reg_d, reg_dv), comm,
+                                              down_pairs)
+            else:
+                moved_d, moved_dv = down, down_v
+
+        if down_pairs is not None:
+            arriving = _mask_sel(r > root, moved_u, moved_d)
+            arr_v = jnp.where(r > root, moved_uv, moved_dv)
+        else:
+            arriving, arr_v = moved_u, moved_uv
+        recv_ok = jnp.logical_and(arr_v > 0.5, jnp.logical_not(at_root))
+
+        value = _mask_sel(at_root, inj, arriving)
+        valid = jnp.where(at_root, inj_ok, recv_ok)
+        new = CollectiveChannel(
+            spec,
+            (buf, sent + _i32(inj_ok), moved_u, moved_uv, moved_d, moved_dv),
+            self.pushed,
+            self.popped + _i32(valid),
+        )
+        return new, value, valid
+
+    # reduce: pipelined chain toward root, contribution FIFO -------------
+
+    def _pop_reduce(self):
+        spec = self.spec
+        comm, root = spec.comm, spec.root
+        P, r = comm.size, comm.rank()
+        buf, pipe, pipe_v, sent, folded = self.state
+        t = spec.step_transport()
+        op = self._op()
+
+        dist = (r - root) % P
+        farthest = dist == P - 1
+        avail = sent < self._limit()
+        inj_ok = jnp.logical_and(farthest, avail)
+
+        # the farthest rank always overwrites its register (injection or
+        # bubble), killing the wrap-around recirculation from the root
+        reg = _mask_sel(
+            farthest,
+            _mask_sel(inj_ok, _take(buf, sent % P), jnp.zeros_like(pipe)),
+            pipe,
+        )
+        reg_v = jnp.where(farthest, _f32flag(inj_ok), pipe_v)
+        with _tagged(t, spec.stats_tag):
+            moved, moved_v = t.permute((reg, reg_v), comm, comm.ring_perm(-1))
+
+        arrived = moved_v > 0.5
+        fold_ok = jnp.logical_and(arrived, jnp.logical_not(farthest))
+        contrib = _take(buf, folded % P)
+        new_pipe = _mask_sel(fold_ok, op(moved, contrib), moved)
+
+        valid = jnp.logical_and(r == root, arrived)
+        new = CollectiveChannel(
+            spec,
+            (buf, new_pipe, moved_v, sent + _i32(inj_ok),
+             folded + _i32(fold_ok)),
+            self.pushed,
+            self.popped + _i32(valid),
+        )
+        return new, new_pipe, valid
+
+    # scatter / gather / allreduce: one schedule round per pop -----------
+
+    def _round(self):
+        """(transport, step, avail) shared by the round channels."""
+        step = self.state[1]
+        return self.spec.step_transport(), step, step < self._limit()
+
+    def _pop_scatter(self):
+        from ..core.collectives import _stream_scatter_impl
+
+        spec = self.spec
+        t, step, avail = self._round()
+        staged = self.state[0]  # (P,)+elem_shape row, meaningful at root
+        with _tagged(t, spec.stats_tag):
+            y = _stream_scatter_impl(staged, spec.comm, root=spec.root,
+                                     transport=t)
+        new = CollectiveChannel(
+            spec, (staged, step + 1), self.pushed, self.popped + _i32(avail)
+        )
+        return new, y[0], avail
+
+    def _pop_gather(self):
+        from ..core.collectives import _stream_gather_impl
+
+        spec = self.spec
+        t, step, avail = self._round()
+        staged = self.state[0]
+        with _tagged(t, spec.stats_tag):
+            y = _stream_gather_impl(staged[None], spec.comm, root=spec.root,
+                                    transport=t)
+        valid = jnp.logical_and(spec.comm.rank() == spec.root, avail)
+        new = CollectiveChannel(
+            spec, (staged, step + 1), self.pushed, self.popped + _i32(valid)
+        )
+        return new, y, valid
+
+    def _pop_allreduce(self):
+        from ..core.collectives import _stream_allreduce_impl
+
+        spec = self.spec
+        t, step, avail = self._round()
+        staged = self.state[0]
+        with _tagged(t, spec.stats_tag):
+            y = _stream_allreduce_impl(staged, spec.comm, transport=t)
+        new = CollectiveChannel(
+            spec, (staged, step + 1), self.pushed, self.popped + _i32(avail)
+        )
+        return new, y, avail
+
+    # ---------------------------------------------------------- transfer
+
+    def transfer(self, x: jax.Array, n_chunks: int | None = None, **kw):
+        """Whole-message collective over this channel: lowers onto the
+        corresponding ``stream_*`` schedule (or the autotuned dispatcher
+        when the spec carries a plan), through the channel's transport
+        backend and stats tag — bit-identical to the direct call on every
+        backend.  Extra kwargs forward to the underlying schedule
+        (``bidir=``, the reduce ``op`` defaults to the spec's)."""
+        from ..core import collectives as C
+
+        spec = self.spec
+        kind = spec.kind
+        if spec.plan is not None and kind in ("bcast", "reduce", "allreduce"):
+            # the autotuned dispatchers own the schedule shape and chunk
+            # count, but the channel still owns the backend instance: the
+            # spec's transport (explicit wins) or the plan's tuned key,
+            # composed with the spec's wire, resolved *here* so the
+            # transfer stays accounted under the channel's stats tag —
+            # the same contract the non-plan path and p2p transfers keep
+            p = C._resolve_plan(spec.plan, kind, spec.comm, x)
+            if spec.transport is not None:
+                t = spec.resolve()
+            else:
+                t = spec.replace(transport=p.transport_key).resolve()
+            with _tagged(t, spec.stats_tag):
+                if kind == "bcast":
+                    return C.bcast(x, spec.comm, root=spec.root, plan=p,
+                                   transport=t)
+                if kind == "reduce":
+                    kw.setdefault("op", self._op())
+                    return C.reduce(x, spec.comm, root=spec.root, plan=p,
+                                    transport=t, **kw)
+                return C.allreduce(x, spec.comm, plan=p, transport=t, **kw)
+
+        t = spec.resolve()
+        nc = n_chunks if n_chunks is not None else spec.n_chunks
+        with _tagged(t, spec.stats_tag):
+            if kind == "bcast":
+                return C._stream_bcast_impl(x, spec.comm, root=spec.root,
+                                            n_chunks=nc, transport=t)
+            if kind == "reduce":
+                kw.setdefault("op", self._op())
+                return C._stream_reduce_impl(x, spec.comm, root=spec.root,
+                                             n_chunks=nc, transport=t, **kw)
+            if kind == "scatter":
+                return C._stream_scatter_impl(x, spec.comm, root=spec.root,
+                                              transport=t)
+            if kind == "gather":
+                return C._stream_gather_impl(x, spec.comm, root=spec.root,
+                                             transport=t)
+            assert kind == "allreduce", kind
+            return C._stream_allreduce_impl(x, spec.comm, transport=t, **kw)
+
+
+# ---------------------------------------------------------------------------
+# open_*_channel: the SMI_Open_*_channel family
+# ---------------------------------------------------------------------------
+
+
+def _open(kind: str, comm: Communicator, *, count, root, port, elem_shape,
+          dtype, transport, wire, tag, plan, n_chunks, op, allocator):
+    spec = _claim(
+        ChannelSpec(
+            comm=comm, kind=kind, count=count, root=root, port=port,
+            transport=transport, wire=wire, tag=tag, plan=plan,
+            n_chunks=n_chunks, op=op,
+        ),
+        allocator,
+    )
+    P = comm.size
+    z = jnp.zeros
+    if kind == "bcast":
+        state = (
+            z((P,) + elem_shape, dtype),      # buf: element FIFO
+            z((), jnp.int32),                 # sent
+            z(elem_shape, dtype),             # pipe up
+            z((), jnp.float32),               # pipe up valid
+            z(elem_shape, dtype),             # pipe down (line topologies)
+            z((), jnp.float32),               # pipe down valid
+        )
+    elif kind == "reduce":
+        state = (
+            z((P,) + elem_shape, dtype),      # buf: contribution FIFO
+            z(elem_shape, dtype),             # pipe
+            z((), jnp.float32),               # pipe valid
+            z((), jnp.int32),                 # sent (farthest rank)
+            z((), jnp.int32),                 # folded (per rank)
+        )
+    elif kind == "scatter":
+        state = (z((P,) + elem_shape, dtype), z((), jnp.int32))
+    else:  # gather / allreduce
+        state = (z(elem_shape, dtype), z((), jnp.int32))
+    return CollectiveChannel(
+        spec=spec,
+        state=tuple(_pvary(s, comm) for s in state),
+        pushed=_pvary(z((), jnp.int32), comm),
+        popped=_pvary(z((), jnp.int32), comm),
+    )
+
+
+def _open_doc(fn, what):
+    fn.__doc__ = f"""SMI_Open_{fn.__name__[5:-8]}_channel: open a transient
+    {what} channel on ``comm``.
+
+    Opening claims ``port`` on the communicator's allocator (``None`` =
+    anonymous) and zeroes the channel state; no communication happens
+    until elements flow.  The spec carries the channel's whole comm
+    config: ``transport`` (registry key / instance / None = the
+    communicator's default), ``wire`` ("raw" | "int8" compressed links),
+    ``tag`` (stats bucket), ``plan`` (netsim autotuning) and
+    ``n_chunks``."""
+    return fn
+
+
+@lambda f: _open_doc(f, "broadcast")
+def open_bcast_channel(comm, *, count=None, root=0, port=0, elem_shape=(),
+                       dtype=jnp.float32, transport=None, wire="raw",
+                       tag=None, plan=None, n_chunks=1, allocator=None):
+    return _open("bcast", comm, count=count, root=root, port=port,
+                 elem_shape=elem_shape, dtype=dtype, transport=transport,
+                 wire=wire, tag=tag, plan=plan, n_chunks=n_chunks, op=None,
+                 allocator=allocator)
+
+
+@lambda f: _open_doc(f, "rooted-reduction")
+def open_reduce_channel(comm, *, count=None, root=0, port=0, elem_shape=(),
+                        dtype=jnp.float32, op=None, transport=None,
+                        wire="raw", tag=None, plan=None, n_chunks=1,
+                        allocator=None):
+    return _open("reduce", comm, count=count, root=root, port=port,
+                 elem_shape=elem_shape, dtype=dtype, transport=transport,
+                 wire=wire, tag=tag, plan=plan, n_chunks=n_chunks, op=op,
+                 allocator=allocator)
+
+
+@lambda f: _open_doc(f, "scatter")
+def open_scatter_channel(comm, *, count=None, root=0, port=0, elem_shape=(),
+                         dtype=jnp.float32, transport=None, wire="raw",
+                         tag=None, plan=None, n_chunks=1, allocator=None):
+    return _open("scatter", comm, count=count, root=root, port=port,
+                 elem_shape=elem_shape, dtype=dtype, transport=transport,
+                 wire=wire, tag=tag, plan=plan, n_chunks=n_chunks, op=None,
+                 allocator=allocator)
+
+
+@lambda f: _open_doc(f, "gather")
+def open_gather_channel(comm, *, count=None, root=0, port=0, elem_shape=(),
+                        dtype=jnp.float32, transport=None, wire="raw",
+                        tag=None, plan=None, n_chunks=1, allocator=None):
+    return _open("gather", comm, count=count, root=root, port=port,
+                 elem_shape=elem_shape, dtype=dtype, transport=transport,
+                 wire=wire, tag=tag, plan=plan, n_chunks=n_chunks, op=None,
+                 allocator=allocator)
+
+
+@lambda f: _open_doc(f, "ring all-reduce")
+def open_allreduce_channel(comm, *, count=None, port=0, elem_shape=(),
+                           dtype=jnp.float32, transport=None, wire="raw",
+                           tag=None, plan=None, n_chunks=1, allocator=None):
+    return _open("allreduce", comm, count=count, root=0, port=port,
+                 elem_shape=elem_shape, dtype=dtype, transport=transport,
+                 wire=wire, tag=tag, plan=plan, n_chunks=n_chunks, op=None,
+                 allocator=allocator)

@@ -1,0 +1,185 @@
+"""ChannelSpec: the single carrier of communication configuration.
+
+The paper configures every transfer at channel-open time: peer, port,
+communicator (§2.2–§2.4).  This repo historically scattered the TPU-side
+equivalents — transport backend, wire format, message tag, tuning plan —
+over per-call kwargs (``transport=``, ``plan=``, ``tag=``, the deprecated
+``quantize=``/``dequantize=``).  :class:`ChannelSpec` folds all of them
+into the open-time descriptor, so a channel *is* its communication config:
+
+* ``port`` — the hardware-endpoint id, claimed through the communicator's
+  :class:`~repro.core.comm.PortAllocator` at open time (``None`` =
+  anonymous: no claim, used by the transient ``stream_*`` shims);
+* ``transport`` — a registry key, a live Transport instance, or ``None``
+  (the communicator's default backend);
+* ``wire`` — ``"raw"`` | ``"int8"``: an int8 wire composes the transport
+  with the compressed-link backend, exactly like a tuned
+  :class:`~repro.netsim.tune.Plan` does;
+* ``tag`` — the :class:`~repro.transport.base.TransportStats` bucket every
+  step of this channel is accounted under (default: ``"port<N>"`` for
+  claimed ports), which is what lets ``netsim.predict_channel_stats`` be
+  asserted against exactly this channel's wire traffic;
+* ``plan`` — ``None`` | ``"auto"`` | a Plan: defers backend / chunk-count
+  / wire selection to the netsim tuning table at transfer time.
+
+Specs ride in the channel pytree's aux data, so they must stay hashable:
+the ``transport`` / ``plan`` / ``op`` fields (possibly live objects or
+functions) are excluded from equality and hashing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from ..core.comm import Communicator
+
+#: channel kinds -> the netsim tuner op their plans are keyed on
+KINDS = ("p2p", "bcast", "reduce", "scatter", "gather", "allreduce",
+         "exchange")
+
+
+@dataclass(frozen=True)
+class ChannelSpec:
+    """Static descriptor: the SMI_Open_*_channel arguments, TPU-rendered."""
+
+    comm: Communicator
+    kind: str = "p2p"
+    #: elements the channel will carry (``None`` = unbounded); push/pop
+    #: validity gates on ``min(count, pushed)``
+    count: int | None = None
+    src: int = 0
+    dst: int = 0
+    root: int = 0
+    #: claimed hardware endpoint id; ``None`` = anonymous (no claim)
+    port: int | None = 0
+    transport: object = field(default=None, compare=False)
+    wire: str = "raw"
+    tag: str | None = None
+    plan: object = field(default=None, compare=False)
+    #: reduction operator for reduce channels (``None`` -> jnp.add)
+    op: object = field(default=None, compare=False)
+    n_chunks: int = 1
+    #: the allocator holding this spec's port claim (set by open_*)
+    allocator: object = field(default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        assert self.kind in KINDS, (
+            f"unknown channel kind {self.kind!r}; one of {KINDS}"
+        )
+        assert self.wire in ("raw", "int8"), (
+            f"unknown wire format {self.wire!r}; 'raw' or 'int8'"
+        )
+
+    # -- route queries (p2p) ------------------------------------------------
+
+    @property
+    def path(self) -> list[int]:
+        return self.comm.route_table.path(self.src, self.dst)
+
+    @property
+    def hops(self) -> int:
+        return len(self.path) - 1
+
+    # -- stats tagging -------------------------------------------------------
+
+    @property
+    def stats_tag(self) -> str | None:
+        """The TransportStats bucket this channel accounts under: an
+        explicit ``tag``, else ``"port<N>"`` for claimed ports, else
+        ``None`` (untagged — the anonymous stream_* shims)."""
+        if self.tag is not None:
+            return self.tag
+        if self.port is not None:
+            return f"port{self.port}"
+        return None
+
+    # -- transport resolution ------------------------------------------------
+
+    @property
+    def transport_key(self) -> str:
+        """Registry key realising this spec's backend + wire (for netsim
+        predictions and comm_mode round-trips).  Requires a string-keyed
+        spec; a live instance's key is reconstructed from its chain."""
+        t = self.transport
+        if t is None:
+            t = self.comm.transport
+        if not isinstance(t, str):
+            t = _instance_key(t)
+        return _compose_wire(t, self.wire)
+
+    def resolve(self):
+        """A Transport instance realising this spec's backend + wire.
+
+        String keys (and ``None``) resolve to a *fresh* instance per call —
+        per-trace stats, and the packet backend's cross-trace reuse guard
+        stays satisfied; a live Transport instance passes through (wrapped
+        in the compressed-link backend when ``wire="int8"``)."""
+        from ..transport.base import Transport
+        from ..transport.registry import get_transport
+
+        t = self.transport
+        if isinstance(t, Transport):
+            if self.wire == "int8" and not getattr(t, "lossy_wire", False):
+                from ..transport.compressed import CompressedTransport
+
+                return CompressedTransport(inner=t)
+            return t
+        key = t if t is not None else self.comm.transport
+        return get_transport(_compose_wire(key, self.wire))
+
+    def step_transport(self):
+        """The instance the element-level push/pop pipeline drives: resolved
+        once per spec (one open = one trace = one backend instance), so
+        per-channel counters accumulate in one place."""
+        cached = self.__dict__.get("_step_transport")
+        if cached is None:
+            cached = self.resolve()
+            object.__setattr__(self, "_step_transport", cached)
+        return cached
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def release_port(self):
+        """Release this spec's port claim (idempotent; a stale double
+        release never frees a later claimant's port)."""
+        if self.allocator is not None and self.port is not None:
+            self.allocator.release(self.comm, self.port, owner=self)
+
+    def replace(self, **kw) -> "ChannelSpec":
+        return replace(self, **kw)
+
+
+def _instance_key(t) -> str:
+    """Reconstruct the registry key of a live Transport chain
+    (``CompressedTransport(inner=PacketTransport)`` -> "compressed:packet")."""
+    name = getattr(t, "name", "") or type(t).__name__
+    inner = getattr(t, "inner", None)
+    if inner is not None and getattr(t, "wraps_inner", False):
+        return f"{name}:{_instance_key(inner)}"
+    return name
+
+
+def _compose_wire(key: str, wire: str) -> str:
+    """Compose a backend key with a wire format, the same spelling a tuned
+    Plan uses: an int8 wire wraps the backend in the compressed link."""
+    if wire == "raw" or key.partition(":")[0] == "compressed":
+        return key
+    return f"compressed:{key}"
+
+
+def default_channel_spec(
+    comm: Communicator, comm_mode: str | None = None, **overrides
+) -> ChannelSpec:
+    """The ChannelSpec a ``comm_mode`` string denotes: ``"smi:<backend>"``
+    maps onto a spec carrying that transport key (``"smi"`` = the
+    communicator's default backend) — the launch-layer strings and the
+    channel API name the same configuration."""
+    if comm_mode is not None:
+        from ..transport.registry import resolve_comm_mode
+
+        base, backend = resolve_comm_mode(comm_mode)
+        assert base == "smi", (
+            f"only smi comm_modes map onto channels; got {comm_mode!r}"
+        )
+        overrides.setdefault("transport", backend)
+    return ChannelSpec(comm=comm, **overrides)

@@ -15,18 +15,36 @@ from .routing import (
     physical_link_map,
 )
 from .streaming import (
-    Channel,
-    ChannelSpec,
-    open_channel,
-    push,
-    pop,
-    channel_transfer,
     stream_p2p,
     stream_exchange,
     run_spmd,
     make_test_mesh,
     pvary,
 )
+
+#: channel API names served lazily from repro.channels (PEP 562): the
+#: channels package imports core.comm, so an eager import here would cycle
+_CHANNEL_EXPORTS = (
+    "Channel",
+    "ChannelSpec",
+    "open_channel",
+    "push",
+    "pop",
+    "channel_transfer",
+    "open_bcast_channel",
+    "open_reduce_channel",
+    "open_scatter_channel",
+    "open_gather_channel",
+    "open_allreduce_channel",
+)
+
+
+def __getattr__(name):
+    if name in _CHANNEL_EXPORTS:
+        from .. import channels
+
+        return getattr(channels, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from .collectives import (
     allreduce,
     bcast,
@@ -60,6 +78,11 @@ __all__ = [
     "push",
     "pop",
     "channel_transfer",
+    "open_bcast_channel",
+    "open_reduce_channel",
+    "open_scatter_channel",
+    "open_gather_channel",
+    "open_allreduce_channel",
     "stream_p2p",
     "stream_exchange",
     "run_spmd",

@@ -240,7 +240,7 @@ def stream_reduce_scatter(
     return acc
 
 
-def stream_allreduce(
+def _stream_allreduce_impl(
     x: jax.Array,
     comm: Communicator,
     *,
@@ -307,7 +307,7 @@ def stream_alltoall(x: jax.Array, comm: Communicator, *, transport=None):
 # ---------------------------------------------------------------------------
 
 
-def stream_bcast(
+def _stream_bcast_impl(
     x: jax.Array,
     comm: Communicator,
     *,
@@ -365,7 +365,7 @@ def stream_bcast(
     return _mask_sel(r == root, x, out)
 
 
-def stream_reduce(
+def _stream_reduce_impl(
     x: jax.Array,
     comm: Communicator,
     *,
@@ -418,7 +418,7 @@ def stream_reduce(
     return _mask_sel(r == root, out, jnp.zeros_like(x))
 
 
-def stream_gather(x: jax.Array, comm: Communicator, *, root: int = 0, transport=None):
+def _stream_gather_impl(x: jax.Array, comm: Communicator, *, root: int = 0, transport=None):
     """Convoy gather: every shard shifts one hop toward the root per step;
     the root receives nearest-first, one shard per step (root-link bandwidth
     optimal, the paper's sequentially-coordinated Gather)."""
@@ -439,7 +439,7 @@ def stream_gather(x: jax.Array, comm: Communicator, *, root: int = 0, transport=
     return out.reshape((P * x.shape[0],) + x.shape[1:])
 
 
-def stream_scatter(x: jax.Array, comm: Communicator, *, root: int = 0, transport=None):
+def _stream_scatter_impl(x: jax.Array, comm: Communicator, *, root: int = 0, transport=None):
     """Convoy scatter: the root injects blocks farthest-first; after P-1
     shifts every rank's pipe register holds its own block."""
     P = comm.size
@@ -457,6 +457,100 @@ def stream_scatter(x: jax.Array, comm: Communicator, *, root: int = 0, transport
         pipe = tp.shift(pipe, comm, +1)
     own = jax.lax.dynamic_index_in_dim(xb, r, 0, keepdims=False)
     return _mask_sel(r == root, own, pipe)
+
+
+# ---------------------------------------------------------------------------
+# Public streamed collectives: thin shims over transient channels
+#
+# The channel API (repro/channels) is the primary surface: each stream_*
+# entry point opens a transient anonymous-port collective channel carrying
+# the call's config and streams the whole message through it — the channel's
+# transfer() lowers back onto the _stream_*_impl schedule above, so results
+# and stats are bit-identical to the pre-channel code on every backend.
+# ---------------------------------------------------------------------------
+
+
+def stream_bcast(
+    x: jax.Array,
+    comm: Communicator,
+    *,
+    root: int = 0,
+    n_chunks: int = 1,
+    transport=None,
+):
+    """Pipelined chain broadcast (paper §4.4 linear scheme); see
+    :func:`_stream_bcast_impl` for the schedule.  Thin shim: opens a
+    transient broadcast channel (``repro.channels.open_bcast_channel``)
+    and transfers through it."""
+    from ..channels import open_bcast_channel
+
+    return open_bcast_channel(
+        comm, root=root, port=None, transport=transport, n_chunks=n_chunks
+    ).transfer(x)
+
+
+def stream_reduce(
+    x: jax.Array,
+    comm: Communicator,
+    *,
+    root: int = 0,
+    n_chunks: int = 1,
+    op=jnp.add,
+    transport=None,
+):
+    """Pipelined chain reduction to ``root`` (paper §4.4); see
+    :func:`_stream_reduce_impl` for the schedule.  Thin shim over a
+    transient reduce channel."""
+    from ..channels import open_reduce_channel
+
+    return open_reduce_channel(
+        comm, root=root, port=None, op=op, transport=transport,
+        n_chunks=n_chunks,
+    ).transfer(x)
+
+
+def stream_gather(x: jax.Array, comm: Communicator, *, root: int = 0,
+                  transport=None):
+    """Convoy gather (root-link bandwidth optimal); see
+    :func:`_stream_gather_impl`.  Thin shim over a transient gather
+    channel."""
+    from ..channels import open_gather_channel
+
+    return open_gather_channel(
+        comm, root=root, port=None, transport=transport
+    ).transfer(x)
+
+
+def stream_scatter(x: jax.Array, comm: Communicator, *, root: int = 0,
+                   transport=None):
+    """Convoy scatter (root injects farthest-first); see
+    :func:`_stream_scatter_impl`.  Thin shim over a transient scatter
+    channel."""
+    from ..channels import open_scatter_channel
+
+    return open_scatter_channel(
+        comm, root=root, port=None, transport=transport
+    ).transfer(x)
+
+
+def stream_allreduce(
+    x: jax.Array,
+    comm: Communicator,
+    *,
+    quantize=None,
+    dequantize=None,
+    bidir: bool = False,
+    transport=None,
+):
+    """Ring all-reduce (RS + AG); see :func:`_stream_allreduce_impl` for
+    the schedule and the lossy-wire rules.  Thin shim over a transient
+    all-reduce channel; the deprecated ``quantize=``/``dequantize=``
+    kwargs forward to the schedule's codec shim unchanged."""
+    from ..channels import open_allreduce_channel
+
+    return open_allreduce_channel(
+        comm, port=None, transport=transport
+    ).transfer(x, quantize=quantize, dequantize=dequantize, bidir=bidir)
 
 
 # ---------------------------------------------------------------------------
@@ -558,8 +652,9 @@ def bcast(x: jax.Array, comm: Communicator, *, root: int = 0,
         return tree_bcast(x, comm, root=root, transport=tp)
     if p.algo == "staged":
         return staged_bcast(x, comm, root=root, transport=tp)
-    return stream_bcast(x, comm, root=root,
-                        n_chunks=p.clamp_chunks(x.shape[0]), transport=tp)
+    return _stream_bcast_impl(x, comm, root=root,
+                              n_chunks=p.clamp_chunks(x.shape[0]),
+                              transport=tp)
 
 
 def reduce(x: jax.Array, comm: Communicator, *, root: int = 0, op=jnp.add,
@@ -571,8 +666,9 @@ def reduce(x: jax.Array, comm: Communicator, *, root: int = 0, op=jnp.add,
         return tree_reduce(x, comm, root=root, op=op, transport=tp)
     if p.algo == "staged":
         return staged_reduce(x, comm, root=root, op=op, transport=tp)
-    return stream_reduce(x, comm, root=root, op=op,
-                         n_chunks=p.clamp_chunks(x.shape[0]), transport=tp)
+    return _stream_reduce_impl(x, comm, root=root, op=op,
+                               n_chunks=p.clamp_chunks(x.shape[0]),
+                               transport=tp)
 
 
 def allreduce(x: jax.Array, comm: Communicator, *, plan="auto",
@@ -582,7 +678,7 @@ def allreduce(x: jax.Array, comm: Communicator, *, plan="auto",
     tuner sweeps no chunk grid for this op and ``plan.n_chunks`` is moot."""
     p = _resolve_plan(plan, "allreduce", comm, x)
     tp = transport if transport is not None else p.transport_key
-    return stream_allreduce(x, comm, transport=tp, **kw)
+    return _stream_allreduce_impl(x, comm, transport=tp, **kw)
 
 
 # ---------------------------------------------------------------------------

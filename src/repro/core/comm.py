@@ -17,6 +17,7 @@ be called inside ``jax.shard_map`` over (at least) the communicator's axes.
 
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass, field, replace
 
 from jax import lax
@@ -120,19 +121,73 @@ class Communicator:
 class PortAllocator:
     """Ports must be known at compile time (paper §2.2); this allocator hands
     out unique port ids per communicator and raises on reuse, which is the
-    software analogue of two kernels contending for one hardware FIFO."""
+    software analogue of two kernels contending for one hardware FIFO.
 
-    used: dict[str, set[int]] = field(default_factory=dict)
+    ``repro.channels.open_channel`` enforces this at open time through the
+    package-level default allocator (``repro.channels.PORTS``): opening a
+    channel claims its port, closing the channel (or leaving its ``with``
+    scope) releases it.  A claim may carry an *owner* — the opening
+    :class:`~repro.channels.ChannelSpec` — held by weak reference: when
+    every channel of a spec is garbage-collected (the trace that opened it
+    is gone), the claim lapses and the port becomes reclaimable, so
+    re-traced functions that open channels without closing them do not
+    poison the allocator.  Ownerless claims (the bare ``claim(comm, port)``
+    form) persist until released, as before.
 
-    def claim(self, comm: Communicator, port: int) -> int:
-        ports = self.used.setdefault(comm.name, set())
+    Claims are keyed per communicator *instance*: two distinct
+    communicators may both use port 0 — they are different route fabrics —
+    but one communicator's port 0 is a single hardware endpoint.
+    """
+
+    #: id(comm) -> {port: owner weakref | None (ownerless / permanent)}
+    used: dict[int, dict] = field(default_factory=dict)
+
+    def _ports(self, comm: Communicator) -> dict:
+        key = id(comm)
+        if key not in self.used:
+            self.used[key] = {}
+            # drop the bucket when the communicator itself is collected
+            weakref.finalize(comm, self.used.pop, key, None)
+        return self.used[key]
+
+    def claim(self, comm: Communicator, port: int, owner=None) -> int:
+        ports = self._ports(comm)
         if port in ports:
-            raise ValueError(
-                f"port {port} already claimed on communicator {comm.name!r}; "
-                "SMI ports identify distinct hardware endpoints and cannot be shared"
-            )
-        ports.add(port)
+            prev = ports[port]
+            if prev is None or prev() is not None:
+                raise ValueError(
+                    f"port {port} already claimed on communicator "
+                    f"{comm.name!r}; SMI ports identify distinct hardware "
+                    "endpoints and cannot be shared — close the other "
+                    "channel (or pick another port) first"
+                )
+        ports[port] = weakref.ref(owner) if owner is not None else None
         return port
 
+    def release(self, comm: Communicator, port: int, owner=None) -> None:
+        """Release ``port`` — only the claim ``owner`` holds (or any claim
+        when ``owner`` is None and the claim is ownerless/dead).  A stale
+        release — a double ``close()`` racing a re-claimed port — must not
+        silently free another live channel's claim."""
+        ports = self.used.get(id(comm), {})
+        if port not in ports:
+            return
+        ref = ports[port]
+        cur = ref() if ref is not None else None
+        if owner is not None:
+            if ref is None or (cur is not None and cur is not owner):
+                return  # ownerless or another live owner holds the port now
+        elif cur is not None:
+            return  # bare release frees only ownerless/dead claims
+        ports.pop(port, None)
+
     def release_all(self, comm: Communicator) -> None:
-        self.used.pop(comm.name, None)
+        self.used.pop(id(comm), None)
+
+    def in_use(self, comm: Communicator) -> tuple[int, ...]:
+        """Ports currently claimed (live owners / ownerless) on ``comm``."""
+        ports = self.used.get(id(comm), {})
+        return tuple(
+            sorted(p for p, ref in ports.items()
+                   if ref is None or ref() is not None)
+        )

@@ -4,21 +4,19 @@ The paper's key primitive is the *transient channel*: open(count, dtype, peer,
 port, comm) then Push/Pop one element per clock cycle inside the pipelined
 loop, with the transport layer forwarding packets hop-by-hop.
 
-TPU adaptation (see DESIGN.md §2): the streaming unit is a *chunk* (a
-hardware-tile-aligned slab) instead of a 28-byte packet payload, and one
-"clock cycle" is one step of a static ppermute schedule.  Two API levels:
+The channel API itself lives in :mod:`repro.channels` — ``open_channel`` /
+``push`` / ``pop`` / ``Channel.transfer`` plus the transient collective
+channels — and is re-exported here for the historic import paths.  What
+remains in this module:
 
-* :func:`stream_p2p` — transfer-level: a whole message streamed through the
-  routed multi-hop pipeline, ``n_chunks`` in flight; this is what the
-  collectives and the overlap engine build on.  Bandwidth is
-  hop-independent (pipelining), latency grows linearly with hops — the
-  paper's Fig. 9 / Tab. 3 behaviour by construction.
-* :class:`Channel` with :func:`push` / :func:`pop` — element-level, faithful
-  to Listing 1 of the paper: ``push`` stages an element into the pipe
-  (masked to the source rank), ``pop`` advances the global pipeline by one
-  hop-step and extracts at the destination.  Under SPMD both calls appear in
-  every rank's trace; masks select the active role, which is the JAX
-  rendering of the paper's MPMD ranks.
+* :func:`stream_p2p` — the legacy transfer-level entry point, now a thin
+  shim that opens a transient (anonymous-port) p2p channel and streams the
+  message through it.  Its ``transport=`` / ``plan=`` kwargs keep working
+  but are deprecated: open a channel carrying the config instead
+  (DESIGN.md §9 has the migration table).
+* :func:`stream_exchange` — single-hop bulk exchange over explicit pairs
+  (the halo-exchange wire; `repro.apps` drives it through a ChannelSpec).
+* the shard_map harness helpers used across tests and benchmarks.
 
 Everything here must execute *inside* ``jax.shard_map`` spanning the
 communicator's mesh axes.
@@ -26,11 +24,10 @@ communicator's mesh axes.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from ..compat import make_mesh as _compat_make_mesh
 from ..compat import pvary_missing
@@ -58,7 +55,7 @@ pvary = _pvary  # public: mark user loop-carry state varying over comm axes
 
 
 # ---------------------------------------------------------------------------
-# Transfer-level streaming p2p
+# Transfer-level streaming p2p (transient-channel shim)
 # ---------------------------------------------------------------------------
 
 
@@ -76,39 +73,35 @@ def stream_p2p(
 
     Every rank passes a same-shaped ``x`` (SPMD); only the source's content
     is transmitted.  Returns a buffer that equals ``x``@src on ``dst`` and is
-    zeros elsewhere.  Dispatches to the selected transport backend: the
-    static/fused backends run the chunk-pipelined multi-hop ppermute
-    schedule (``n_chunks`` chunks in flight, the asynchronicity degree k of
-    §3.3); the packet backend stages the message into the dynamic router.
+    zeros elsewhere.
 
-    ``plan="auto"`` (or an explicit :class:`repro.netsim.tune.Plan`) lets
-    the netsim tuning table choose the backend and chunk count for this
-    topology and message size; explicit ``transport``/``n_chunks`` keep
-    their meaning when no plan is given.
+    This is a compatibility shim over the channel API: it opens a transient
+    anonymous-port p2p channel carrying the call's config and streams the
+    message with :meth:`~repro.channels.Channel.transfer` — the static/fused
+    backends run the chunk-pipelined multi-hop ppermute schedule
+    (``n_chunks`` chunks in flight, the asynchronicity degree k of §3.3);
+    the packet backend stages the message into the dynamic router.
+
+    ``transport=`` and ``plan=`` are deprecated here: carry them on the
+    channel instead (``open_channel(comm, src=..., dst=...,
+    transport=..., plan=...)``), where they configure *every* transfer and
+    push/pop of the channel, not one call.
     """
-    from ..transport.registry import resolve_transport
+    from ..channels import open_channel
 
-    if plan is not None:
-        from ..netsim.tune import Plan
-
-        if not isinstance(plan, Plan):
-            assert plan == "auto", (
-                f"plan must be 'auto', None or a Plan; got {plan!r}"
-            )
-            nbytes = x.size * x.dtype.itemsize
-            plan = comm.plan("p2p", int(nbytes))
-        if plan.wire != "raw" and not jnp.issubdtype(x.dtype, jnp.floating):
-            # integer payloads must move exactly: same plan, raw wire
-            import dataclasses
-
-            plan = dataclasses.replace(plan, wire="raw")
-        if transport is None:
-            transport = plan.transport_key
-        n_chunks = plan.clamp_chunks(x.shape[0])
-
-    return resolve_transport(transport, comm).p2p(
-        x, src=src, dst=dst, comm=comm, n_chunks=n_chunks
+    if transport is not None or plan is not None:
+        warnings.warn(
+            "stream_p2p(transport=..., plan=...) is deprecated; open a "
+            "channel carrying the config instead: open_channel(comm, "
+            "src=..., dst=..., transport=..., plan=...).transfer(x) "
+            "(DESIGN.md §9)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    ch = open_channel(
+        comm, src=src, dst=dst, port=None, transport=transport, plan=plan
     )
+    return ch.transfer(x, n_chunks=n_chunks)
 
 
 def stream_exchange(
@@ -136,132 +129,42 @@ def stream_exchange(
 
 
 # ---------------------------------------------------------------------------
-# Element-level transient channels (paper Listing 1)
+# Element-level transient channels: re-exported from repro.channels
 # ---------------------------------------------------------------------------
 
-
-@dataclass(frozen=True)
-class ChannelSpec:
-    """Static descriptor: SMI_Open_*_channel arguments."""
-
-    count: int
-    src: int
-    dst: int
-    port: int
-    comm: Communicator
-
-    @property
-    def path(self) -> list[int]:
-        return self.comm.route_table.path(self.src, self.dst)
-
-    @property
-    def hops(self) -> int:
-        return len(self.path) - 1
+#: names served lazily from repro.channels (PEP 562) — a top-level import
+#: here would cycle (channels -> core.comm -> core package -> this module)
+_CHANNEL_EXPORTS = (
+    "Channel",
+    "ChannelSpec",
+    "channel_transfer",
+    "open_channel",
+    "pop",
+    "push",
+)
 
 
-@jax.tree_util.register_pytree_node_class
-@dataclass
-class Channel:
-    """Traced channel state: a 1-deep pipe register per rank on the route.
+def __getattr__(name):
+    if name in _CHANNEL_EXPORTS:
+        from .. import channels
 
-    ``pushed``/``popped`` count progress; ``pipe`` holds the in-flight element
-    at this rank; ``valid`` tags pipeline bubbles.  The spec (static) rides in
-    the pytree aux data, so channels can be loop carries.
-    """
-
-    spec: ChannelSpec
-    pipe: jax.Array
-    valid: jax.Array  # bool scalar: pipe holds a live element
-    pushed: jax.Array  # i32 scalar
-    popped: jax.Array  # i32 scalar
-
-    def tree_flatten(self):
-        return (self.pipe, self.valid, self.pushed, self.popped), self.spec
-
-    @classmethod
-    def tree_unflatten(cls, spec, leaves):
-        return cls(spec, *leaves)
+        return getattr(channels, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def open_channel(
-    comm: Communicator,
-    *,
-    count: int,
-    src: int,
-    dst: int,
-    port: int = 0,
-    elem_shape=(),
-    dtype=jnp.float32,
-) -> Channel:
-    """SMI_Open_send_channel / SMI_Open_recv_channel.
-
-    Opening is a zero-cost operation (paper §3.3 eager protocol): it only
-    creates the descriptor and a zeroed pipe register; no communication
-    happens until elements flow.
-    """
-    spec = ChannelSpec(count=count, src=src, dst=dst, port=port, comm=comm)
-    return Channel(
-        spec=spec,
-        pipe=_pvary(jnp.zeros(elem_shape, dtype), comm),
-        valid=_pvary(jnp.zeros((), jnp.bool_), comm),
-        pushed=_pvary(jnp.zeros((), jnp.int32), comm),
-        popped=_pvary(jnp.zeros((), jnp.int32), comm),
-    )
-
-
-def push(chan: Channel, elem: jax.Array) -> Channel:
-    """SMI_Push: stage ``elem`` into the pipe at the source rank.
-
-    Non-blocking in trace terms; the element starts moving on the next
-    :func:`pop` (the schedule's pipeline advance).  Pipelines to one advance
-    per loop iteration — the ii=1 requirement of §3.1.1.
-    """
-    r = chan.spec.comm.rank()
-    at_src = r == chan.spec.src
-    new_pipe = _mask_sel(at_src, jnp.asarray(elem, chan.pipe.dtype), chan.pipe)
-    new_valid = jnp.where(at_src, True, chan.valid)
-    return Channel(
-        chan.spec,
-        new_pipe,
-        new_valid,
-        chan.pushed + jnp.where(at_src, 1, 0).astype(jnp.int32),
-        chan.popped,
-    )
-
-
-def pop(chan: Channel):
-    """SMI_Pop: advance the channel pipeline one hop-step and extract.
-
-    Returns ``(chan', value, valid)``: after ``hops`` advances the element
-    pushed first arrives, so a consumer loop runs ``count + hops - 1``
-    iterations and gates on ``valid`` — exactly a hardware pipeline with
-    latency = network distance (paper Tab. 3).
-    """
-    spec = chan.spec
-    r = spec.comm.rank()
-    pairs = spec.comm.path_perm(spec.path)
-    moved = lax.ppermute(chan.pipe, spec.comm.axis, pairs)
-    moved_valid = lax.ppermute(chan.valid, spec.comm.axis, pairs)
-    at_dst = r == spec.dst
-    value = moved
-    valid = jnp.logical_and(at_dst, moved_valid)
-    new = Channel(
-        spec,
-        moved,
-        moved_valid,
-        chan.pushed,
-        chan.popped + jnp.where(valid, 1, 0).astype(jnp.int32),
-    )
-    return new, value, valid
-
-
-def channel_transfer(chan: Channel, x: jax.Array, n_chunks: int = 1) -> jax.Array:
-    """Whole-message convenience: stream ``x`` over an open channel (chunked),
-    equivalent to count/chunk pushes + pops.  Dispatches to the pipelined
-    transfer engine."""
-    return stream_p2p(
-        x, src=chan.spec.src, dst=chan.spec.dst, comm=chan.spec.comm, n_chunks=n_chunks
-    )
+__all__ = [
+    "Channel",
+    "ChannelSpec",
+    "channel_transfer",
+    "open_channel",
+    "pop",
+    "push",
+    "pvary",
+    "stream_exchange",
+    "stream_p2p",
+    "run_spmd",
+    "make_test_mesh",
+]
 
 
 # ---------------------------------------------------------------------------

@@ -60,6 +60,18 @@ class ParallelCtx:
     def is_smi(self) -> bool:
         return self.comm_mode == "smi"
 
+    def channel_spec(self, **overrides):
+        """The :class:`~repro.channels.ChannelSpec` this context's
+        comm_mode denotes: model code opens channels on the TP communicator
+        carrying the launch-selected transport backend (DESIGN.md §9)."""
+        from ..channels import default_channel_spec
+
+        assert self.model_comm is not None, (
+            "channel_spec needs a model communicator (comm_mode != 'none')"
+        )
+        overrides.setdefault("transport", self.transport)
+        return default_channel_spec(self.model_comm, None, **overrides)
+
     @property
     def tp(self) -> int:
         return self.model_comm.size if self.model_comm is not None else 1

@@ -31,6 +31,7 @@ from .schedule import (
     p2p_messages,
     packet_bounds,
     packet_n_packets,
+    predict_channel_stats,
     predict_halo_stats,
     predict_halo_time,
     predict_transport_stats,
@@ -66,6 +67,7 @@ __all__ = [
     "p2p_messages",
     "packet_bounds",
     "packet_n_packets",
+    "predict_channel_stats",
     "predict_halo_stats",
     "predict_halo_time",
     "predict_transport_stats",

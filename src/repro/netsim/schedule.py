@@ -396,3 +396,34 @@ def predict_transport_stats(
         raise ValueError(f"unknown op {op!r}")
 
     raise ValueError(f"no stats model for transport {transport!r}")
+
+
+def predict_channel_stats(spec, *, shape, dtype="float32", n_chunks=None,
+                          **kw):
+    """Exact (steps, bytes_moved) one whole-message ``transfer`` of
+    ``shape`` over a p2p channel tallies into its backend's stats —
+    and, because every channel step is accounted under the channel's
+    :attr:`~repro.channels.ChannelSpec.stats_tag`, the numbers
+    ``stats.tag_counts(spec.stats_tag)`` holds after tracing.
+
+    ``spec`` is a :class:`~repro.channels.ChannelSpec` (duck-typed: any
+    object with ``comm`` / ``kind`` / ``src`` / ``dst`` / ``transport_key``
+    / ``n_chunks`` attributes works, keeping this module jax-free).  The
+    channel's transport key selects the stats model — ``"static"`` /
+    ``"fused"`` (same wire), ``"packet"`` (router schedule bounds), or the
+    int8 compressed link (``"compressed"`` over a static inner) — exactly
+    the backends :func:`predict_transport_stats` covers.
+    """
+    assert spec.kind == "p2p", (
+        f"channel-stats prediction covers p2p channels; got {spec.kind!r}"
+    )
+    key = spec.transport_key
+    if key == "fused":
+        key = "static"  # identical permute schedule and wire accounting
+    elif key == "compressed:fused":
+        key = "compressed:static"  # same aliasing under the int8 wire
+    nc = n_chunks if n_chunks is not None else spec.n_chunks
+    return predict_transport_stats(
+        spec.comm, "p2p", shape=shape, dtype=dtype, transport=key,
+        src=spec.src, dst=spec.dst, n_chunks=nc, **kw,
+    )

@@ -1,4 +1,16 @@
-"""Transient channels + streamed p2p engine tests (paper §3.1)."""
+"""First-class SMI channels: p2p + transient collective channels (§2.2–§2.4).
+
+Covers the channel API of ``repro/channels``: port claims through the
+PortAllocator, push/pop pipeline semantics (arrival latency = route hops,
+``valid`` gating of pipeline bubbles, pushed/popped counters), p2p channels
+over every transport backend with per-channel tagged TransportStats matching
+``netsim.predict_channel_stats`` to the byte, transient collective channels
+(bit-identical to their ``stream_*`` equivalents on every backend), and the
+deprecation shims the legacy kwarg call sites keep working through.
+"""
+
+import gc
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -6,18 +18,34 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.channels import (
+    ChannelSpec,
+    default_channel_spec,
+    open_allreduce_channel,
+    open_bcast_channel,
+    open_gather_channel,
+    open_reduce_channel,
+    open_scatter_channel,
+)
 from repro.core import (
     Communicator,
     Topology,
     open_channel,
     push,
     pop,
+    stream_allreduce,
+    stream_bcast,
+    stream_gather,
     stream_p2p,
+    stream_reduce,
+    stream_scatter,
     make_test_mesh,
     pvary,
     run_spmd,
     PortAllocator,
 )
+from repro.netsim import predict_channel_stats
+from repro.transport import get_transport
 
 
 @pytest.fixture(scope="module")
@@ -148,3 +176,652 @@ def test_channel_dtype_preserved(ring8):
     y = run_spmd(fn, mesh, P("x"), P("x"), x)
     assert y.dtype == jnp.int8
     np.testing.assert_array_equal(np.asarray(y[6]), np.asarray(x[2]))
+
+
+# ---------------------------------------------------------------------------
+# port claims: open_channel enforces the PortAllocator
+# ---------------------------------------------------------------------------
+
+
+def test_open_channel_enforces_port_claim(ring8):
+    _, comm = ring8
+    pa = PortAllocator()
+    ch = open_channel(comm, src=0, dst=1, port=0, allocator=pa)
+    assert pa.in_use(comm) == (0,)
+    with pytest.raises(ValueError, match="port 0 already claimed"):
+        open_channel(comm, src=0, dst=2, port=0, allocator=pa)
+    # a different port coexists; close releases and the port is reusable
+    other = open_channel(comm, src=0, dst=2, port=1, allocator=pa)
+    assert pa.in_use(comm) == (0, 1)
+    ch.close()
+    assert pa.in_use(comm) == (1,)
+    reopened = open_channel(comm, src=3, dst=4, port=0, allocator=pa)
+    reopened.close()
+    other.close()
+
+
+def test_channel_scope_releases_port(ring8):
+    _, comm = ring8
+    pa = PortAllocator()
+    with open_bcast_channel(comm, root=0, port=7, allocator=pa):
+        assert pa.in_use(comm) == (7,)
+        with pytest.raises(ValueError):
+            open_reduce_channel(comm, root=0, port=7, allocator=pa)
+    assert pa.in_use(comm) == ()
+
+
+def test_anonymous_channels_claim_nothing(ring8):
+    _, comm = ring8
+    pa = PortAllocator()
+    a = open_channel(comm, src=0, dst=1, port=None, allocator=pa)
+    b = open_channel(comm, src=0, dst=2, port=None, allocator=pa)
+    assert pa.in_use(comm) == ()
+    a.close(), b.close()
+
+
+def test_stale_double_close_cannot_free_other_claim(ring8):
+    """close() is idempotent per channel: a stale second close must not
+    release a later channel's live claim on the same port."""
+    _, comm = ring8
+    pa = PortAllocator()
+    a = open_channel(comm, src=0, dst=1, port=2, allocator=pa)
+    a.close()
+    b = open_channel(comm, src=0, dst=1, port=2, allocator=pa)
+    a.close()  # stale: port 2 now belongs to b
+    assert pa.in_use(comm) == (2,)
+    with pytest.raises(ValueError):
+        open_channel(comm, src=0, dst=1, port=2, allocator=pa)
+    # nor may a stale spec release free an ownerless (bare-claim) port
+    c = open_channel(comm, src=0, dst=1, port=7, allocator=pa)
+    c.close()
+    pa.claim(comm, 7)  # ownerless claim takes the freed port
+    c.close()  # stale: must not free the bare claim
+    assert 7 in pa.in_use(comm)
+    pa.release(comm, 7)  # an unowned release does free it
+    b.close()
+    assert pa.in_use(comm) == ()
+
+
+def test_garbage_collected_channel_claim_lapses(ring8):
+    """A claim owned by a dead spec (its opening trace is gone) must not
+    poison the allocator — re-tracing functions that never close."""
+    _, comm = ring8
+    pa = PortAllocator()
+    ch = open_channel(comm, src=0, dst=1, port=2, allocator=pa)
+    del ch
+    gc.collect()
+    assert pa.in_use(comm) == ()
+    again = open_channel(comm, src=0, dst=1, port=2, allocator=pa)
+    again.close()
+
+
+# ---------------------------------------------------------------------------
+# ChannelSpec: the single config carrier
+# ---------------------------------------------------------------------------
+
+
+def test_default_channel_spec_maps_comm_modes(ring8):
+    _, comm = ring8
+    assert default_channel_spec(comm, "smi:packet").transport == "packet"
+    assert default_channel_spec(comm, "smi").transport == "static"
+    spec = default_channel_spec(comm, "smi:compressed:packet")
+    assert spec.transport == "compressed:packet"
+    assert spec.transport_key == "compressed:packet"
+    with pytest.raises(AssertionError):
+        default_channel_spec(comm, "bulk")
+
+
+def test_channel_spec_wire_composes_transport_key(ring8):
+    _, comm = ring8
+    spec = ChannelSpec(comm=comm, transport="packet", wire="int8")
+    assert spec.transport_key == "compressed:packet"
+    assert type(spec.resolve()).__name__ == "CompressedTransport"
+    raw = ChannelSpec(comm=comm, transport="static")
+    assert raw.transport_key == "static"
+    # stats tag defaults to the claimed port, explicit tag wins
+    assert ChannelSpec(comm=comm, port=4).stats_tag == "port4"
+    assert ChannelSpec(comm=comm, port=4, tag="h").stats_tag == "h"
+    assert ChannelSpec(comm=comm, port=None).stats_tag is None
+
+
+def test_parallel_ctx_channel_spec():
+    """The launch layer's comm_mode lands on a ChannelSpec: model code can
+    open channels on the TP communicator without re-threading the backend."""
+    from repro.mesh import make_ctx
+
+    mesh = make_test_mesh((8,), ("model",))
+    ctx = make_ctx(mesh, model_axis="model", batch_axes=(),
+                   comm_mode="smi:packet")
+    spec = ctx.channel_spec(kind="p2p", src=0, dst=3, port=None)
+    assert spec.comm is ctx.model_comm
+    assert spec.transport == "packet"
+    assert spec.transport_key == "packet"
+
+
+def test_channel_transfer_carries_port_and_transport(ring8):
+    """Regression (ISSUE 5 satellite): the pre-redesign channel_transfer
+    dropped the channel's port and dispatched to the communicator-default
+    transport.  A transfer must move through the channel's own backend and
+    account under its port tag."""
+    mesh, comm = ring8
+    t = get_transport("packet")
+    x = jnp.arange(8 * 32, dtype=jnp.float32).reshape(8, 32)
+
+    def fn(v):
+        ch = open_channel(comm, src=0, dst=5, port=3, transport=t,
+                          n_chunks=4, allocator=PortAllocator())
+        return ch.transfer(v[0])[None]
+
+    y = run_spmd(fn, mesh, P("x"), P("x"), x)
+    np.testing.assert_array_equal(np.asarray(y[5]), np.asarray(x[0]))
+    # the packet backend (not the static default) moved the bytes...
+    assert t.stats.steps > 0
+    # ...and every step of them is accounted under the channel's port tag
+    assert t.stats.tag_counts("port3") == (t.stats.steps, t.stats.bytes_moved)
+
+
+# ---------------------------------------------------------------------------
+# p2p channels over every backend: push/pop latency, counters, netsim stats
+# ---------------------------------------------------------------------------
+
+BACKENDS = ("static", "packet", "fused", "compressed")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_push_pop_over_backend(ring8, backend):
+    """The element pipeline moves through the channel's transport backend:
+    arrival latency == routed hops (paper Tab. 3) on every backend, and the
+    pushed/popped counters track the roles."""
+    mesh, comm = ring8
+    N, SRC, DST = 3, 0, 3
+    hops = comm.route_table.n_hops(SRC, DST)
+    iters = N + hops + 2  # trailing pops = pipeline bubbles
+    lossy = backend == "compressed"
+
+    def fn(dummy):
+        chan = open_channel(comm, count=N, src=SRC, dst=DST, port=None,
+                            transport=backend, dtype=jnp.float32)
+        acc = pvary(jnp.zeros((iters,), jnp.float32), comm)
+        arrived = pvary(jnp.zeros((iters,), jnp.float32), comm)
+        for i in range(iters):  # unrolled: the packet router threads
+            if i < N:           # runtime counters (no fori_loop)
+                chan = push(chan, jnp.float32(i + 1))
+            chan, val, valid = pop(chan)
+            acc = jnp.where(valid, acc.at[i].set(val), acc)
+            arrived = jnp.where(valid, arrived.at[i].set(1.0), arrived)
+        return (acc[None], arrived[None], chan.pushed[None],
+                chan.popped[None])
+
+    acc, arr, pushed, popped = run_spmd(
+        fn, mesh, P("x"), (P("x"), P("x"), P("x"), P("x")),
+        jnp.zeros((8, 1)),
+    )
+    arr_dst = np.asarray(arr[DST])
+    # element j pushed at iteration j arrives after `hops` hop-steps
+    want_arrival = np.zeros((iters,))
+    want_arrival[hops - 1:hops - 1 + N] = 1.0
+    np.testing.assert_array_equal(arr_dst, want_arrival)
+    got = np.asarray(acc[DST])[hops - 1:hops - 1 + N]
+    if lossy:
+        np.testing.assert_allclose(got, 1.0 + np.arange(N), rtol=0.02)
+    else:
+        np.testing.assert_array_equal(got, 1.0 + np.arange(N))
+    # counters: src counted N pushes, dst N valid pops, bubbles ignored
+    assert int(pushed[SRC]) == N and int(popped[DST]) == N
+    assert int(popped[SRC]) == 0 and int(pushed[DST]) == 0
+    # no other rank ever popped valid data
+    for r in range(8):
+        if r != DST:
+            assert int(popped[r]) == 0
+
+
+@pytest.mark.parametrize("backend", ["packet", "compressed"])
+def test_p2p_channel_stats_match_netsim(ring8, backend):
+    """Acceptance: a packet-/compressed-backed p2p channel's *tagged*
+    TransportStats match netsim.predict_channel_stats to the byte."""
+    mesh, comm = ring8
+    t = get_transport(backend)
+    shape, n_chunks, dst = (32,), 4, 5
+    x = jnp.asarray(
+        np.random.RandomState(3).randn(8, *shape), jnp.float32
+    )
+
+    def fn(v):
+        ch = open_channel(comm, src=0, dst=dst, port=6, transport=t,
+                          n_chunks=n_chunks, allocator=PortAllocator())
+        return ch.transfer(v[0])[None]
+
+    y = run_spmd(fn, mesh, P("x"), P("x"), x)
+    if backend != "compressed":
+        np.testing.assert_array_equal(np.asarray(y[dst]), np.asarray(x[0]))
+
+    spec = ChannelSpec(comm=comm, kind="p2p", src=0, dst=dst, port=6,
+                       transport=backend, n_chunks=n_chunks)
+    steps, nbytes = predict_channel_stats(spec, shape=shape)
+    assert spec.stats_tag == "port6"
+    assert t.stats.tag_counts("port6") == (steps, nbytes), (
+        f"{backend}: tagged stats {t.stats.tag_counts('port6')} != "
+        f"predicted {(steps, nbytes)}"
+    )
+
+
+def test_predict_channel_stats_fused_aliases_static(ring8):
+    _, comm = ring8
+    fused = ChannelSpec(comm=comm, src=0, dst=4, transport="fused",
+                        n_chunks=2)
+    static = ChannelSpec(comm=comm, src=0, dst=4, transport="static",
+                         n_chunks=2)
+    assert (predict_channel_stats(fused, shape=(16,))
+            == predict_channel_stats(static, shape=(16,)))
+
+
+# ---------------------------------------------------------------------------
+# transient collective channels: element-level push/pop semantics
+# ---------------------------------------------------------------------------
+
+
+def test_bcast_channel_push_pop_ring(ring8):
+    """§2.4: the root pushes, every rank pops — pipelined chain with
+    per-rank latency = ring distance, bubbles gated by ``valid``."""
+    mesh, comm = ring8
+    N, ROOT, PP = 4, 0, 8
+    iters = N + PP  # enough to drain the farthest rank + bubbles
+
+    def fn(v):
+        chan = open_bcast_channel(comm, count=N, root=ROOT, port=None,
+                                  dtype=jnp.float32)
+        acc = pvary(jnp.zeros((iters,), jnp.float32), comm)
+        hit = pvary(jnp.zeros((iters,), jnp.float32), comm)
+
+        def body(i, carry):
+            chan, acc, hit = carry
+            chan = chan.push(jax.lax.dynamic_index_in_dim(
+                v[0], jnp.minimum(i, N - 1), 0, keepdims=False))
+            chan, val, valid = chan.pop()
+            acc = jnp.where(valid, acc.at[i].set(val), acc)
+            hit = jnp.where(valid, hit.at[i].set(1.0), hit)
+            return chan, acc, hit
+
+        chan, acc, hit = jax.lax.fori_loop(
+            0, iters, body, (chan, acc, hit))
+        return acc[None], hit[None], chan.popped[None]
+
+    x = jnp.asarray(np.random.RandomState(0).randn(8, N), jnp.float32)
+    acc, hit, popped = run_spmd(
+        fn, mesh, P("x"), (P("x"), P("x"), P("x")), x)
+    root_seq = np.asarray(x[ROOT])
+    for r in range(8):
+        dist = (r - ROOT) % 8
+        # pop i advances one hop-step: a rank d hops downstream first
+        # delivers at pop d-1 (the root delivers its injection at pop 0)
+        off = max(dist - 1, 0)
+        got_hits = np.asarray(hit[r])
+        want_hits = np.zeros((iters,))
+        want_hits[off:off + N] = 1.0  # latency = ring distance
+        np.testing.assert_array_equal(got_hits, want_hits, err_msg=f"r={r}")
+        np.testing.assert_allclose(
+            np.asarray(acc[r])[off:off + N], root_seq, rtol=1e-6,
+            err_msg=f"rank {r}",
+        )
+        assert int(popped[r]) == N  # every rank delivers N, bubbles gated
+
+
+def test_bcast_channel_push_pop_line_mid_root(ring8):
+    """On a line (bus) topology the chain splits at the root: latency =
+    |r - root| in both directions."""
+    del ring8
+    mesh = make_test_mesh((8,), ("x",))
+    comm = Communicator.create("x", (8,), topology=Topology.bus(8))
+    N, ROOT = 3, 3
+    iters = N + 5  # farthest distance on the line is 4 (rank 7)
+
+    def fn(v):
+        chan = open_bcast_channel(comm, count=N, root=ROOT, port=None,
+                                  dtype=jnp.float32)
+        acc = pvary(jnp.zeros((iters,), jnp.float32), comm)
+        hit = pvary(jnp.zeros((iters,), jnp.float32), comm)
+
+        def body(i, carry):
+            chan, acc, hit = carry
+            chan = chan.push(jax.lax.dynamic_index_in_dim(
+                v[0], jnp.minimum(i, N - 1), 0, keepdims=False))
+            chan, val, valid = chan.pop()
+            acc = jnp.where(valid, acc.at[i].set(val), acc)
+            hit = jnp.where(valid, hit.at[i].set(1.0), hit)
+            return chan, acc, hit
+
+        chan, acc, hit = jax.lax.fori_loop(0, iters, body, (chan, acc, hit))
+        return acc[None], hit[None]
+
+    x = jnp.asarray(np.random.RandomState(1).randn(8, N), jnp.float32)
+    acc, hit = run_spmd(fn, mesh, P("x"), (P("x"), P("x")), x)
+    for r in range(8):
+        dist = abs(r - ROOT)
+        off = max(dist - 1, 0)
+        want_hits = np.zeros((iters,))
+        want_hits[off:off + N] = 1.0
+        np.testing.assert_array_equal(np.asarray(hit[r]), want_hits,
+                                      err_msg=f"r={r}")
+        np.testing.assert_allclose(
+            np.asarray(acc[r])[off:off + N], np.asarray(x[ROOT]),
+            rtol=1e-6, err_msg=f"rank {r}",
+        )
+
+
+def test_reduce_channel_push_pop(ring8):
+    """Every rank pushes contributions; the root pops the reduced stream
+    after the chain latency, element order preserved."""
+    mesh, comm = ring8
+    N, ROOT, PP = 3, 0, 8
+    iters = N + PP
+
+    def fn(v):
+        chan = open_reduce_channel(comm, count=N, root=ROOT, port=None,
+                                   dtype=jnp.float32)
+        acc = pvary(jnp.zeros((iters,), jnp.float32), comm)
+        hit = pvary(jnp.zeros((iters,), jnp.float32), comm)
+
+        def body(i, carry):
+            chan, acc, hit = carry
+            chan = chan.push(jax.lax.dynamic_index_in_dim(
+                v[0], jnp.minimum(i, N - 1), 0, keepdims=False))
+            chan, val, valid = chan.pop()
+            acc = jnp.where(valid, acc.at[i].set(val), acc)
+            hit = jnp.where(valid, hit.at[i].set(1.0), hit)
+            return chan, acc, hit
+
+        chan, acc, hit = jax.lax.fori_loop(0, iters, body, (chan, acc, hit))
+        return acc[None], hit[None], chan.popped[None]
+
+    x = jnp.asarray(np.random.RandomState(2).randn(8, N), jnp.float32)
+    acc, hit, popped = run_spmd(
+        fn, mesh, P("x"), (P("x"), P("x"), P("x")), x)
+    want = np.asarray(x).sum(axis=0)  # elementwise sum over ranks
+    hits_root = np.asarray(hit[ROOT])
+    first = int(np.argmax(hits_root))
+    assert hits_root[first:first + N].all() and hits_root.sum() == N
+    np.testing.assert_allclose(
+        np.asarray(acc[ROOT])[first:first + N], want, rtol=1e-5)
+    assert int(popped[ROOT]) == N
+    for r in range(1, 8):
+        assert int(popped[r]) == 0
+
+
+def test_round_channels_push_pop(ring8):
+    """scatter/gather/allreduce channels: one schedule round per pop, the
+    count cap gates extra pops invalid."""
+    mesh, comm = ring8
+    PP, N = 8, 2
+    rng = np.random.RandomState(4)
+    rows = jnp.asarray(rng.randn(N, PP), jnp.float32)  # scatter payloads
+    mine = jnp.asarray(rng.randn(8, N), jnp.float32)   # per-rank elements
+
+    def fn(v):
+        sc = open_scatter_channel(comm, count=N, root=0, port=None,
+                                  elem_shape=(), dtype=jnp.float32)
+        ar = open_allreduce_channel(comm, count=N, port=None,
+                                    elem_shape=(), dtype=jnp.float32)
+        outs, oks = [], []
+        for i in range(N + 1):  # one extra round: must pop invalid
+            j = min(i, N - 1)
+            sc = sc.push(rows[j])  # root's row: one element per rank
+            ar = ar.push(v[0][j])
+            sc, s_val, s_ok = sc.pop()
+            ar, a_val, a_ok = ar.pop()
+            outs.append((s_val, a_val))
+            oks.append((jnp.asarray(s_ok).astype(jnp.float32),
+                        jnp.asarray(a_ok).astype(jnp.float32)))
+        return (jnp.stack([s for s, _ in outs])[None],
+                jnp.stack([a for _, a in outs])[None],
+                jnp.stack([jnp.stack(o) for o in oks])[None])
+
+    s_out, a_out, oks = run_spmd(
+        fn, mesh, P("x"), (P("x"), P("x"), P("x")), mine)
+    for r in range(8):
+        ok = np.asarray(oks[r])
+        assert ok[:N].all() and not ok[N].any()  # count gates round N
+        np.testing.assert_allclose(  # scatter: rank r gets column r
+            np.asarray(s_out[r])[:N], np.asarray(rows)[:, r], rtol=1e-6)
+        np.testing.assert_allclose(  # allreduce: every rank the sum
+            np.asarray(a_out[r])[:N], np.asarray(mine).sum(axis=0).T[:N],
+            rtol=1e-5)
+
+
+def test_gather_channel_push_pop(ring8):
+    mesh, comm = ring8
+    PP, N = 8, 2
+    mine = jnp.asarray(np.random.RandomState(5).randn(8, N), jnp.float32)
+
+    def fn(v):
+        ga = open_gather_channel(comm, count=N, root=0, port=None,
+                                 elem_shape=(), dtype=jnp.float32)
+        outs, oks = [], []
+        for i in range(N):
+            ga = ga.push(v[0][i])
+            ga, rows, ok = ga.pop()
+            outs.append(rows)
+            oks.append(jnp.asarray(ok).astype(jnp.float32))
+        return jnp.stack(outs)[None], jnp.stack(oks)[None]
+
+    rows, oks = run_spmd(fn, mesh, P("x"), (P("x"), P("x")), mine)
+    assert np.asarray(oks[0]).all()  # root pops valid rows
+    for r in range(1, 8):
+        assert not np.asarray(oks[r]).any()  # gather delivers only at root
+    np.testing.assert_allclose(  # round i: the (P,)-row of element i
+        np.asarray(rows[0]), np.asarray(mine).T[:N], rtol=1e-6)
+
+
+def test_collective_channel_plan_path_keeps_tag(ring8):
+    """A planned collective transfer still moves through the channel's
+    backend and accounts under its stats tag (the per-channel accounting
+    contract must not depend on whether a plan rides the spec)."""
+    mesh, comm = ring8
+    from repro.netsim.tune import Plan
+
+    t = get_transport("static")
+    plan = Plan(transport="static", n_chunks=2, algo="ring", wire="raw")
+    x = jnp.asarray(np.random.RandomState(11).randn(8, 4, 3), jnp.float32)
+
+    def fn(v):
+        ch = open_bcast_channel(comm, root=0, port=4, transport=t,
+                                plan=plan, allocator=PortAllocator())
+        return ch.transfer(v[0])[None]
+
+    y = run_spmd(fn, mesh, P("x"), P("x"), x)
+    np.testing.assert_array_equal(np.asarray(y[3]), np.asarray(x[0]))
+    assert t.stats.steps > 0
+    assert t.stats.tag_counts("port4") == (t.stats.steps,
+                                           t.stats.bytes_moved)
+
+
+def test_p2p_channel_count_caps_validity(ring8):
+    """A bounded p2p channel delivers at most ``count`` valid elements —
+    the documented min(count, pushed) validity gate."""
+    mesh, comm = ring8
+    COUNT, SRC, DST = 2, 0, 2
+    hops = comm.route_table.n_hops(SRC, DST)
+    iters = 4 + hops
+
+    def fn(v):
+        chan = open_channel(comm, count=COUNT, src=SRC, dst=DST, port=None,
+                            dtype=jnp.float32)
+        acc = pvary(jnp.zeros((iters,), jnp.float32), comm)
+        for i in range(iters):
+            if i < 4:  # push twice as many elements as the channel's count
+                chan = push(chan, jnp.float32(i + 1))
+            chan, val, valid = pop(chan)
+            acc = jnp.where(valid, acc.at[i].set(val), acc)
+        return acc[None], chan.popped[None]
+
+    acc, popped = run_spmd(fn, mesh, P("x"), (P("x"), P("x")),
+                           jnp.zeros((8, 1)))
+    assert int(popped[DST]) == COUNT
+    got = np.asarray(acc[DST])
+    np.testing.assert_array_equal(got[got != 0], [1.0, 2.0])
+
+
+def test_collective_push_overrun_refused_not_corrupted(ring8):
+    """Pushes beyond the P-deep credit window are refused (SMI_Push
+    backpressure), never silently overwriting undelivered elements."""
+    mesh, comm = ring8
+    PP, N = 8, 10  # two more pushes than the FIFO holds
+
+    def fn(v):
+        chan = open_bcast_channel(comm, count=N, root=0, port=None,
+                                  dtype=jnp.float32)
+        for i in range(N):  # burst: all pushes before any pop
+            chan = chan.push(v[0][i])
+        accepted = chan.pushed
+        acc = pvary(jnp.zeros((N,), jnp.float32), comm)
+
+        def body(i, carry):
+            chan, acc = carry
+            chan, val, valid = chan.pop()
+            acc = jnp.where(valid, acc.at[jnp.minimum(i, N - 1)].set(val),
+                            acc)
+            return chan, acc
+
+        chan, acc = jax.lax.fori_loop(0, N + PP, body, (chan, acc))
+        return acc[None], accepted[None], chan.popped[None]
+
+    x = jnp.asarray(np.random.RandomState(6).randn(8, N), jnp.float32)
+    acc, accepted, popped = run_spmd(
+        fn, mesh, P("x"), (P("x"), P("x"), P("x")), x)
+    assert int(accepted[0]) == PP  # the window refused the 2 overrun pushes
+    assert int(popped[0]) == PP    # and delivery stops at the accepted count
+    got = np.asarray(acc[0])       # drain is pop-only: acc slots 0..PP-1
+    np.testing.assert_allclose(     # ...hold the first PP pushes unmangled
+        got[:PP], np.asarray(x[0])[:PP], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# transient collective channels == stream_* on every backend & topology
+# ---------------------------------------------------------------------------
+
+COLLECTIVE_TOPOLOGIES = {
+    "ring1x8": lambda: (
+        make_test_mesh((8,), ("x",)),
+        Communicator.create("x", (8,)),
+        P("x"),
+    ),
+    "torus2x4": lambda: (
+        make_test_mesh((2, 4), ("x", "y")),
+        Communicator.create(("x", "y"), (2, 4)),
+        P(("x", "y")),
+    ),
+}
+
+
+@pytest.mark.parametrize("topo", sorted(COLLECTIVE_TOPOLOGIES))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_collective_channels_bitexact_vs_stream(topo, backend):
+    """Acceptance: bcast/reduce/scatter/gather/allreduce over transient
+    collective channels produce bit-identical results to the corresponding
+    ``stream_*`` calls on all four transport backends, ring + torus."""
+    mesh, comm, spec = COLLECTIVE_TOPOLOGIES[topo]()
+    PP = comm.size
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(PP, 4, 3), jnp.float32)   # bcast/reduce/ar
+    g = jnp.asarray(rng.randn(PP, 2, 3), jnp.float32)   # gather shards
+    full = jnp.asarray(rng.randn(PP * 2, 3), jnp.float32)  # scatter rows
+
+    def chan_fn(v, gv, fv):
+        b = open_bcast_channel(comm, root=1, port=None, transport=backend,
+                               n_chunks=2).transfer(v[0])
+        r = open_reduce_channel(comm, root=0, port=None, transport=backend,
+                                n_chunks=2).transfer(v[0])
+        gt = open_gather_channel(comm, root=0, port=None,
+                                 transport=backend).transfer(gv[0])
+        s = open_scatter_channel(comm, root=0, port=None,
+                                 transport=backend).transfer(fv)
+        a = open_allreduce_channel(comm, port=None,
+                                   transport=backend).transfer(v[0])
+        return b[None], r[None], gt[None], s[None], a[None]
+
+    def stream_fn(v, gv, fv):
+        b = stream_bcast(v[0], comm, root=1, n_chunks=2, transport=backend)
+        r = stream_reduce(v[0], comm, root=0, n_chunks=2, transport=backend)
+        gt = stream_gather(gv[0], comm, root=0, transport=backend)
+        s = stream_scatter(fv, comm, root=0, transport=backend)
+        a = stream_allreduce(v[0], comm, transport=backend)
+        return b[None], r[None], gt[None], s[None], a[None]
+
+    outs = {}
+    for label, fn in (("channel", chan_fn), ("stream", stream_fn)):
+        outs[label] = run_spmd(
+            fn, mesh, (spec, spec, P(None)),
+            (spec, spec, spec, spec, spec), x, g, full,
+        )
+    for kind, got, want in zip(
+        ("bcast", "reduce", "gather", "scatter", "allreduce"),
+        outs["channel"], outs["stream"],
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"{kind} channel != stream_* on {backend}@{topo}",
+        )
+    if backend != "compressed":  # ground truth on exact wires
+        b, r, gt, s, a = (np.asarray(o) for o in outs["channel"])
+        xs = np.asarray(x)
+        for rr in range(PP):
+            np.testing.assert_allclose(b[rr], xs[1], rtol=1e-6)
+            np.testing.assert_allclose(a[rr], xs.sum(0), rtol=1e-5)
+        np.testing.assert_allclose(r[0], xs.sum(0), rtol=1e-5)
+        np.testing.assert_allclose(
+            gt[0].reshape(PP, 2, 3), np.asarray(g), rtol=1e-6)
+        np.testing.assert_allclose(
+            s.reshape(PP * 2, 3), np.asarray(full), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: the legacy kwarg call sites keep working
+# ---------------------------------------------------------------------------
+
+
+def test_stream_p2p_transport_kwarg_deprecated_but_identical(ring8):
+    mesh, comm = ring8
+    x = jnp.asarray(np.random.RandomState(8).randn(8, 16), jnp.float32)
+
+    with pytest.warns(DeprecationWarning, match="open a channel"):
+        legacy = run_spmd(
+            lambda v: stream_p2p(v[0], src=0, dst=4, comm=comm, n_chunks=2,
+                                 transport="packet")[None],
+            mesh, P("x"), P("x"), x,
+        )
+    channel = run_spmd(
+        lambda v: open_channel(comm, src=0, dst=4, port=None, n_chunks=2,
+                               transport="packet").transfer(v[0])[None],
+        mesh, P("x"), P("x"), x,
+    )
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(channel))
+
+
+def test_stream_p2p_plan_kwarg_deprecated_but_identical(ring8):
+    mesh, comm = ring8
+    x = jnp.asarray(np.random.RandomState(9).randn(8, 16), jnp.float32)
+
+    with pytest.warns(DeprecationWarning, match="DESIGN.md"):
+        legacy = run_spmd(
+            lambda v: stream_p2p(v[0], src=0, dst=5, comm=comm,
+                                 plan="auto")[None],
+            mesh, P("x"), P("x"), x,
+        )
+    channel = run_spmd(
+        lambda v: open_channel(comm, src=0, dst=5, port=None,
+                               plan="auto").transfer(v[0])[None],
+        mesh, P("x"), P("x"), x,
+    )
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(channel))
+
+
+def test_stream_p2p_plain_call_does_not_warn(ring8):
+    mesh, comm = ring8
+    x = jnp.ones((8, 8), jnp.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        y = run_spmd(
+            lambda v: stream_p2p(v[0], src=0, dst=2, comm=comm,
+                                 n_chunks=2)[None],
+            mesh, P("x"), P("x"), x,
+        )
+    np.testing.assert_array_equal(np.asarray(y[2]), np.asarray(x[0]))
