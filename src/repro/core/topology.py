@@ -122,8 +122,15 @@ class Topology:
         )
 
     def to_json(self) -> str:
-        edges = sorted({(min(a, b), max(a, b)) for a in range(self.n_ranks) for b in self.links[a]})
-        return json.dumps({"n_ranks": self.n_ranks, "edges": [list(e) for e in edges], "name": self.name})
+        edges = sorted(
+            {(min(a, b), max(a, b))
+             for a in range(self.n_ranks) for b in self.links[a]}
+        )
+        return json.dumps({
+            "n_ranks": self.n_ranks,
+            "edges": [list(e) for e in edges],
+            "name": self.name,
+        })
 
     # -- queries ----------------------------------------------------------
 

@@ -12,7 +12,12 @@ from .kernel import matmul_pallas
 from .ref import matmul_ref
 
 
-@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_pallas", "interpret", "out_dtype"))
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_m", "block_n", "block_k", "use_pallas", "interpret", "out_dtype"
+    ),
+)
 def matmul(
     x: jax.Array,
     w: jax.Array,
