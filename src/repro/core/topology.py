@@ -122,15 +122,10 @@ class Topology:
         )
 
     def to_json(self) -> str:
-        edges = sorted(
-            {(min(a, b), max(a, b))
-             for a in range(self.n_ranks) for b in self.links[a]}
+        edges = sorted({(min(a, b), max(a, b)) for a in range(self.n_ranks) for b in self.links[a]})
+        return json.dumps(
+            {"n_ranks": self.n_ranks, "edges": [list(e) for e in edges], "name": self.name}
         )
-        return json.dumps({
-            "n_ranks": self.n_ranks,
-            "edges": [list(e) for e in edges],
-            "name": self.name,
-        })
 
     # -- queries ----------------------------------------------------------
 

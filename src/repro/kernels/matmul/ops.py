@@ -14,9 +14,7 @@ from .ref import matmul_ref
 
 @partial(
     jax.jit,
-    static_argnames=(
-        "block_m", "block_n", "block_k", "use_pallas", "interpret", "out_dtype"
-    ),
+    static_argnames=("block_m", "block_n", "block_k", "use_pallas", "interpret", "out_dtype"),
 )
 def matmul(
     x: jax.Array,

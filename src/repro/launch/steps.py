@@ -307,8 +307,7 @@ def build_prefill(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     step = jax.jit(
         smapped,
         in_shardings=(param_sh,) + tuple(
-            NamedSharding(mesh, bspecs[k])
-            for k in (["tokens", "pixel_embeds"] if has_pix else ["tokens"])
+            NamedSharding(mesh, bspecs[k]) for k in (["tokens", "pixel_embeds"] if has_pix else ["tokens"])
         ),
     )
 
