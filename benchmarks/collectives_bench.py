@@ -110,7 +110,20 @@ def run(transports=("static", "packet", "fused", "compressed"),
                 f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
                                           out_specs=P("x")))
                 t = timeit(f, x)
-                csv_row(f"reduce_fig11,{mb:.2f}MB,{topo},{name}", t * 1e6, "")
+                if name.startswith("smi"):
+                    # chain reduce folds an accumulate into every tick; the
+                    # fused backend elides the unfused add's HBM round-trip
+                    steps = n_chunks + PP - 2
+                    wire = wire_of(name[4:-1])
+                    per_tick = V5E_MODEL.hop_time_wire(
+                        elems * 4 / n_chunks, wire)
+                    if name != "smi[fused]":
+                        per_tick += V5E_MODEL.unfused_add_latency
+                    derived = f"v5e_model_us={steps * per_tick * 1e6:.1f}"
+                else:
+                    derived = ""
+                csv_row(f"reduce_fig11,{mb:.2f}MB,{topo},{name}", t * 1e6,
+                        derived)
                 out.append(("reduce", mb, topo, name, t, None))
                 table[("reduce", mb, topo, name)] = t
 
@@ -125,9 +138,17 @@ def run(transports=("static", "packet", "fused", "compressed"),
                                               out_specs=P("x")))
                     t = timeit(f, x)
                     name = f"smi[{tname}]"
+                    # RS+AG: 2(P-1) permute ticks of nbytes/P flits; the
+                    # P-1 reduce-scatter ticks fold an accumulate each
+                    ticks = 2 * (PP - 1)
+                    wire = wire_of(tname)
+                    model = ticks * V5E_MODEL.hop_time_wire(
+                        elems * 4 / PP, wire)
+                    if tname != "fused":
+                        model += (PP - 1) * V5E_MODEL.unfused_add_latency
                     csv_row(f"allreduce_ring,{mb:.2f}MB,{topo},{name}",
-                            t * 1e6, "")
-                    out.append(("allreduce", mb, topo, name, t, None))
+                            t * 1e6, f"v5e_model_us={model * 1e6:.1f}")
+                    out.append(("allreduce", mb, topo, name, t, model))
                     table[("allreduce", mb, topo, name)] = t
 
     _print_backend_table(table, transports)

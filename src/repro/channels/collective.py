@@ -227,7 +227,11 @@ class CollectiveChannel(_ChannelBase):
         arrived = moved_v > 0.5
         fold_ok = jnp.logical_and(arrived, jnp.logical_not(farthest))
         contrib = _take(buf, folded % P)
-        new_pipe = _mask_sel(fold_ok, op(moved, contrib), moved)
+        # plain-add folds run on the transport's accumulate datapath (the
+        # fused backend's Pallas kernel); the validity mask stays outside
+        folded_val = t.accumulate(moved, contrib) if op is jnp.add \
+            else op(moved, contrib)
+        new_pipe = _mask_sel(fold_ok, folded_val, moved)
 
         valid = jnp.logical_and(r == root, arrived)
         new = CollectiveChannel(

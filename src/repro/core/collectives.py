@@ -405,7 +405,13 @@ def _stream_reduce_impl(
         c = t - (P - 2 - dist)
         live = jnp.logical_and(c >= 0, c < n_chunks)
         add_ok = jnp.logical_and(live, dist < P - 1)
-        pipe = _mask_sel(add_ok, op(pipe, chunk_at(c)), pipe)
+        # Plain-add folds route through the transport's accumulate hook so
+        # the fused backend runs them on its tiled Pallas datapath; the
+        # mask stays outside the hook (a masked lane must keep `pipe`
+        # bit-exactly, not `pipe + 0`).
+        folded = tp.accumulate(pipe, chunk_at(c)) if op is jnp.add \
+            else op(pipe, chunk_at(c))
+        pipe = _mask_sel(add_ok, folded, pipe)
         # Root delivers.
         store = jnp.logical_and(r == root, live)
         upd = lax.dynamic_update_slice_in_dim(out, pipe, jnp.maximum(c, 0) * csz, axis=0)
@@ -603,7 +609,9 @@ def tree_reduce(
         recv = rel < h
         # ranks in [h, 2h) sent; ranks in [0, h) fold the arrival in.
         sent_exists = jnp.logical_and(recv, rel + h < P)
-        buf = _mask_sel(sent_exists, op(buf, moved), buf)
+        folded = tp.accumulate(buf, moved) if op is jnp.add \
+            else op(buf, moved)
+        buf = _mask_sel(sent_exists, folded, buf)
     return _mask_sel(r == root, buf, jnp.zeros_like(buf))
 
 
@@ -717,7 +725,8 @@ def staged_reduce(x, comm: Communicator, *, root: int = 0, op=jnp.add, transport
         buf = _mask_sel(r == src, x, jnp.zeros_like(x))
         for a, b in zip(path[:-1], path[1:]):
             buf = tp.permute(buf, comm, [(a, b)])
-        acc = _mask_sel(r == root, op(acc, buf), acc)
+        folded = tp.accumulate(acc, buf) if op is jnp.add else op(acc, buf)
+        acc = _mask_sel(r == root, folded, acc)
     return acc
 
 

@@ -24,9 +24,27 @@ Per router step (one "clock cycle"):
 Store-and-forward with a bounded transit FIFO; an overflow counter is
 returned so tests/benchmarks can assert lossless runs (the paper's links
 provide backpressure; we provide provable-capacity schedules instead).
+A delivery buffer past ``out_cap`` and a transit queue past ``transit_cap``
+both *drop* the packet and count it in ``overflow``.
 
 Packets: payload (PKT_ELEMS f32) + header (dst rank, port) — the 28 B + 4 B
 network packet of §4.2, scaled to a TPU-friendly chunk.
+
+Three implementations of the identical tick semantics (DESIGN.md §10):
+
+* ``impl="scalar"`` — the per-link Python-unrolled reference loop;
+* ``impl="vector"`` — whole-state array ops (one masked argmax arbitrates
+  all links per tick, prefix-sum absorb), ONE packed ``all_to_all``
+  exchange per tick instead of a ppermute per link, and an early-exit
+  batched tick loop (a scan of cond'd batches — reverse-differentiable)
+  that goes idle as soon as the network drains;
+* ``impl="pallas"`` — the vector tick as a Pallas kernel
+  (``kernels/router``) whose FIFO/arbiter state is aliased in place
+  (VMEM-resident on TPU); interpret-mode fallback elsewhere.
+
+``impl=None`` auto-selects: pallas on TPU, vector otherwise.  All three
+produce bit-identical ``(out_pay, out_cnt, overflow, t_done)`` — asserted
+by the equivalence tests in ``tests/test_router.py``.
 """
 
 from __future__ import annotations
@@ -145,6 +163,38 @@ class RouterConfig:
     # cost: switching input FIFOs costs one dead cycle on the link (the
     # paper's Tab. 4 effect; our combinational arbiter has no such cost
     # physically, so it is opt-in for the reproduction benchmark)
+    tick_batch: int | None = None  # ticks advanced per loop body in the
+    # vector/pallas datapath; the drain check runs once per batch, so
+    # up to tick_batch - 1 idle (identity) ticks run past the drain point.
+    # None = adaptive: 2 on the packed exchange (its drain check is free —
+    # the pending count rides in the packet's lane), 4 on the psum
+    # fallback, where deeper batches amortize the extra collective
+
+
+def _default_impl() -> str:
+    from ..kernels.common import on_tpu
+
+    return "pallas" if on_tpu() else "vector"
+
+
+def _exchange_tables(links, n: int):
+    """Static per-rank exchange tables for the packed all_to_all tick.
+
+    ``nbr[r, li]`` = the rank link ``li`` delivers to from ``r``;
+    ``src[r, li]`` = the rank whose link-``li`` packet lands on ``r``.
+    ``packed_ok`` is True when every rank's link destinations are distinct
+    (always the case for torus links), so one (n, F) row buffer carries at
+    most one packet per destination and a single tiled ``all_to_all``
+    replaces the per-link ppermutes."""
+    NL = len(links)
+    nbr = np.zeros((n, NL), np.int32)
+    src = np.zeros((n, NL), np.int32)
+    for li, (_lid, pairs) in enumerate(links):
+        for s, d in pairs:
+            nbr[s, li] = d
+            src[d, li] = s
+    packed_ok = all(len(set(nbr[q])) == NL for q in range(n))
+    return nbr, src, packed_ok
 
 
 def run_router(
@@ -155,17 +205,44 @@ def run_router(
     inq_dst: jax.Array,        # (n_ports, fifo_cap) destination ranks
     inq_len: jax.Array,        # (n_ports,) packets staged per FIFO
     n_steps: int,
+    *,
+    impl: str | None = None,
+    interpret: bool | None = None,
 ):
-    """Execute ``n_steps`` router cycles.  Must run inside shard_map.
+    """Execute up to ``n_steps`` router cycles.  Must run inside shard_map.
 
-    Returns (out_pay, out_cnt, overflow): per-port delivery buffers, their
-    fill counts, and the transit-overflow counter (0 == lossless run).
+    Returns (out_pay, out_cnt, overflow, t_done): per-port delivery
+    buffers, their fill counts, the loss counter (0 == lossless run) and
+    the last delivery tick.  ``impl`` picks the datapath ("scalar" |
+    "vector" | "pallas"; None auto-selects — see module docstring); the
+    vector/pallas datapaths may stop early once the network drains, which
+    never changes the returned values.  ``interpret`` forces the Pallas
+    tick kernel through the interpreter (None: interpret off TPU).
     """
+    links = make_links(cfg.dims)
+    if impl is None:
+        impl = _default_impl()
+    if impl != "scalar" and (not links or inq_pay.dtype != jnp.float32):
+        # degenerate fabrics (no links) and exotic wire dtypes keep the
+        # reference path; the packetised wire is always f32
+        impl = "scalar"
+    if impl == "scalar":
+        return _run_router_scalar(
+            cfg, comm, route_tbl, inq_pay, inq_dst, inq_len, n_steps, links)
+    assert impl in ("vector", "pallas"), impl
+    return _run_router_vector(
+        cfg, comm, route_tbl, inq_pay, inq_dst, inq_len, n_steps, links,
+        use_pallas=impl == "pallas", interpret=interpret)
+
+
+def _run_router_scalar(
+    cfg, comm, route_tbl, inq_pay, inq_dst, inq_len, n_steps, links
+):
+    """The per-link scalar reference loop (the equivalence-test oracle)."""
     n = comm.size
     r = comm.rank()
     E = cfg.pkt_elems
     NP = cfg.n_ports
-    links = make_links(cfg.dims)
     NL = len(links)
     my_tbl = route_tbl[jnp.minimum(r, n - 1)]  # (n,) link id per dst
 
@@ -276,14 +353,21 @@ def run_router(
         for pay, dst, prt, val in arrivals:
             mine = jnp.logical_and(val, dst == r)
             fwd = jnp.logical_and(val, dst != r)
-            # deliver to port buffer
+            # deliver to port buffer; a full buffer drops the packet and
+            # counts it in overflow, like a transit overrun (it must not
+            # silently overwrite the last delivered packet)
+            fits = st["out_cnt"][jnp.clip(prt, 0, NP - 1)] < cfg.out_cap
+            delivered = jnp.logical_and(mine, fits)
             for p in range(NP):
-                hit = jnp.logical_and(mine, prt == p)
+                hit = jnp.logical_and(delivered, prt == p)
                 slot = jnp.clip(st["out_cnt"][p], 0, cfg.out_cap - 1)
                 newbuf = st["out_pay"].at[p, slot].set(pay)
                 st["out_pay"] = jnp.where(hit, newbuf, st["out_pay"])
                 st["out_cnt"] = st["out_cnt"].at[p].add(jnp.where(hit, 1, 0))
-            st["t_done"] = jnp.where(mine, t.astype(jnp.int32), st["t_done"])
+            st["overflow"] = st["overflow"] + jnp.where(
+                jnp.logical_and(mine, ~fits), 1, 0
+            )
+            st["t_done"] = jnp.where(delivered, t.astype(jnp.int32), st["t_done"])
             # park in transit ring buffer
             room = st["tr_cnt"] < cfg.transit_cap
             ok = jnp.logical_and(fwd, room)
@@ -298,4 +382,141 @@ def run_router(
         return st
 
     st = lax.fori_loop(0, n_steps, step, init())
+    return st["out_pay"], st["out_cnt"], st["overflow"], st["t_done"]
+
+
+def _run_router_vector(
+    cfg, comm, route_tbl, inq_pay, inq_dst, inq_len, n_steps, links, *,
+    use_pallas: bool, interpret: bool | None,
+):
+    """Vectorized batched-tick datapath (DESIGN.md §10).
+
+    Per tick: ``router_tick`` (absorb + one-shot arbitration, pure array
+    ops — or the Pallas kernel wrapping the same function) followed by ONE
+    packed ``all_to_all`` moving every link's packet row plus a global
+    pending lane.  The tick loop is a ``scan`` of ``cond``'d batches
+    advancing ``cfg.tick_batch`` ticks each that go idle as soon as the
+    pending lane reports the network drained — idle ticks are identity
+    on every returned value, so the early out is output-invariant with
+    the scalar reference running all ``n_steps`` cycles, and scan+cond
+    keep the datapath reverse-differentiable for the training path.
+    """
+    from ..compat import HAS_VMA
+    from ..kernels.common import on_tpu
+    from ..kernels.router import router_absorb, router_tick, \
+        router_tick_pallas, tick_spec_of
+
+    n = comm.size
+    r = comm.rank()
+    E = cfg.pkt_elems
+    NL = len(links)
+    F = E + 4  # lanes: dst, port, valid, pending + payload
+    spec = tick_spec_of(cfg, n, [lid for lid, _ in links])
+    my_tbl = route_tbl[jnp.minimum(r, n - 1)]
+    inq_len = inq_len.astype(jnp.int32)
+    nbr, src, packed_ok = _exchange_tables(links, n)
+    nbr_r = jnp.asarray(nbr)[jnp.minimum(r, n - 1)]
+    src_r = jnp.asarray(src)[jnp.minimum(r, n - 1)]
+    if interpret is None:
+        interpret = not on_tpu()
+    # the drain predicate must be replicated: on VMA runtimes that is a
+    # psum of the local pending count; pre-VMA runtimes read the packed
+    # exchange's own pending lane (same value, no extra collective)
+    lane_live = packed_ok and not HAS_VMA
+
+    def init():
+        z = lambda *sh_dt: _pvary(jnp.zeros(*sh_dt), comm)
+        st = dict(
+            inq_head=z((cfg.n_ports,), jnp.int32),
+            tr_pay=z((cfg.transit_cap, E), inq_pay.dtype),
+            tr_dst=z((cfg.transit_cap,), jnp.int32),
+            tr_port=z((cfg.transit_cap,), jnp.int32),
+            tr_head=z((), jnp.int32),
+            tr_cnt=z((), jnp.int32),
+            out_pay=z((cfg.n_ports, cfg.out_cap, E), inq_pay.dtype),
+            out_cnt=z((cfg.n_ports,), jnp.int32),
+            overflow=z((), jnp.int32),
+            last_src=z((NL,), jnp.int32),
+            stick=z((NL,), jnp.int32),
+            t_done=z((), jnp.int32),
+        )
+        arr = (z((NL, E), inq_pay.dtype), z((NL,), jnp.int32),
+               z((NL,), jnp.int32), z((NL,), bool))
+        return st, arr
+
+    def tick(st, arr, t):
+        if use_pallas:
+            return router_tick_pallas(
+                spec, my_tbl, inq_pay, inq_dst, inq_len, st, *arr, r, t,
+                interpret=interpret)
+        return router_tick(
+            spec, my_tbl, inq_pay, inq_dst, inq_len, st, *arr, r, t)
+
+    def exchange(snd_pay, snd_dst, snd_prt, snd_val, pending):
+        pend_f = pending.astype(jnp.float32)
+        row = jnp.concatenate([
+            snd_dst.astype(jnp.float32)[:, None],
+            snd_prt.astype(jnp.float32)[:, None],
+            snd_val.astype(jnp.float32)[:, None],
+            jnp.broadcast_to(pend_f, (NL,))[:, None],
+            snd_pay,
+        ], axis=1)                                           # (NL, F)
+        if packed_ok:
+            # one collective for the whole fabric: row li rides at the
+            # destination's index, every row carries the pending lane
+            buf = _pvary(jnp.zeros((n, F), jnp.float32), comm)
+            buf = buf.at[:, 3].set(pend_f)
+            buf = buf.at[nbr_r].set(row)
+            got = lax.all_to_all(buf, comm.axis, 0, 0, tiled=True)
+            rows = got[src_r]                                # (NL, F)
+            live = got[:, 3].sum().astype(jnp.int32)
+        else:
+            rows = jnp.stack([
+                lax.ppermute(row[li], comm.axis, pairs)
+                for li, (_lid, pairs) in enumerate(links)
+            ])
+            live = jnp.asarray(0, jnp.int32)
+        if not lane_live:
+            live = lax.psum(pending, comm.axis)
+        arr = (rows[:, 4:], rows[:, 0].astype(jnp.int32),
+               rows[:, 1].astype(jnp.int32), rows[:, 2] > 0.5)
+        return arr, live
+
+    # batch size must divide n_steps: the drain check only runs between
+    # batches, and a batch straddling the n_steps bound would tick a
+    # still-live network past the cycle budget the scalar reference stops
+    # at (idle ticks are identity, over-budget *live* ticks are not)
+    req = cfg.tick_batch if cfg.tick_batch is not None \
+        else (2 if lane_live else 4)
+    B = max(1, min(int(req), int(n_steps)))
+    while n_steps % B:
+        B -= 1
+
+    # early exit without while_loop: a scan over n_steps // B batches
+    # whose body is a cond — once the pending lane reports the network
+    # drained, the remaining batches take the identity branch (the taken
+    # branch is all XLA executes, so drained batches cost ~nothing).
+    # cond + scan both carry transpose rules, which keeps the packet
+    # datapath reverse-differentiable end to end (the training path
+    # differentiates straight through the router, like the scalar
+    # reference's concrete-bound fori_loop); while_loop does not.
+    def batch(carry):
+        st, arr, t, live = carry
+        for _ in range(B):
+            st, sp, sd, sq, sv, pend = tick(st, arr, t)
+            arr, live = exchange(sp, sd, sq, sv, pend)
+            t = t + 1
+        return st, arr, t, live
+
+    def body(carry, _):
+        return lax.cond(carry[3] > 0, batch, lambda c: c, carry), None
+
+    st0, arr0 = init()
+    (st, arr, t, _live), _ = lax.scan(
+        body,
+        (st0, arr0, jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32)),
+        None, length=n_steps // B,
+    )
+    # the final exchange's arrivals are still in flight at loop exit
+    st = router_absorb(spec, st, *arr, r, t - 1)
     return st["out_pay"], st["out_cnt"], st["overflow"], st["t_done"]

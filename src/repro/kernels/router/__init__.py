@@ -1,0 +1,10 @@
+"""Vectorized router datapath kernels (DESIGN.md §10).
+
+``ref`` holds the pure single-tick datapath (absorb + arbitrate) shared by
+the lax "vector" implementation and the Pallas kernel; ``kernel`` wraps it
+in a ``pallas_call`` whose FIFO/arbiter state stays aliased in place
+(VMEM-resident on TPU) across ticks.
+"""
+
+from .kernel import router_tick_pallas  # noqa: F401
+from .ref import TickSpec, router_absorb, router_tick, tick_spec_of  # noqa: F401

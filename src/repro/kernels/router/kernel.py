@@ -1,0 +1,124 @@
+"""Pallas tick kernel for the packet router (DESIGN.md §10).
+
+One ``pallas_call`` executes a full router tick — absorb the previous
+tick's arrivals, arbitrate all links, pop the selected FIFO heads — over
+the *same* pure datapath as the lax implementation (``ref.router_tick``).
+Every piece of mutable router state (input-FIFO heads, transit ring
+buffer, delivery buffers, arbiter latch/stickiness, counters) is passed in
+and aliased onto the corresponding output via ``input_output_aliases``, so
+on TPU the state tensors live in VMEM and are updated in place tick after
+tick instead of round-tripping HBM between loop iterations.  Off TPU the
+kernel runs under the Pallas interpreter (``interpret=True``) and lowers
+to the identical XLA ops as the vector path — bit-for-bit equal, which is
+what the equivalence tests assert.
+
+Scalars ride as (1, 1) tiles and 1-D state as (1, k) rows (TPU refs want
+>= 2D); the wrapper reshapes at the boundary so callers keep the reference
+implementation's shapes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ref import TickSpec, router_tick
+
+#: state-dict keys in the fixed ref-argument order of the kernel
+STATE_KEYS = (
+    "inq_head", "tr_pay", "tr_dst", "tr_port", "tr_head", "tr_cnt",
+    "out_pay", "out_cnt", "overflow", "last_src", "stick", "t_done",
+)
+
+#: keys whose carried shape is 0-D / 1-D and rides as (1, k) in the kernel
+_FLAT = {"inq_head", "tr_dst", "tr_port", "tr_head", "tr_cnt", "out_cnt",
+         "overflow", "last_src", "stick", "t_done"}
+
+
+def _widen(k, v):
+    return v.reshape(1, -1) if k in _FLAT else v
+
+
+def _narrow(k, v, like):
+    return v.reshape(like.shape) if k in _FLAT else v
+
+
+def _make_kernel(spec: TickSpec):
+    def kernel(my_tbl_ref, link_ids_ref, inq_pay_ref, inq_dst_ref,
+               inq_len_ref, meta_ref, arr_pay_ref, arr_meta_ref,
+               *state_refs):
+        in_refs = state_refs[:len(STATE_KEYS)]
+        out_refs = state_refs[len(STATE_KEYS):len(STATE_KEYS) * 2]
+        snd_pay_ref, snd_meta_ref, pend_ref = state_refs[len(STATE_KEYS) * 2:]
+
+        st = {}
+        for k, ref in zip(STATE_KEYS, in_refs):
+            v = ref[...]
+            if k in ("tr_head", "tr_cnt", "overflow", "t_done"):
+                v = v[0, 0]
+            elif k in _FLAT:
+                v = v[0, :]
+            st[k] = v
+        r = meta_ref[0, 0]
+        t = meta_ref[0, 1]
+        st, snd_pay, snd_dst, snd_prt, snd_val, pending = router_tick(
+            spec, my_tbl_ref[0, :], inq_pay_ref[...], inq_dst_ref[...],
+            inq_len_ref[0, :], st,
+            arr_pay_ref[...], arr_meta_ref[0, :], arr_meta_ref[1, :],
+            arr_meta_ref[2, :] > 0, r, t, link_ids_ref[0, :],
+        )
+        for k, ref in zip(STATE_KEYS, out_refs):
+            ref[...] = st[k].reshape(ref.shape)
+        snd_pay_ref[...] = snd_pay
+        snd_meta_ref[...] = jnp.stack(
+            [snd_dst, snd_prt, snd_val.astype(jnp.int32)])
+        pend_ref[...] = pending.reshape(1, 1)
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("spec", "interpret"))
+def router_tick_pallas(spec: TickSpec, my_tbl, inq_pay, inq_dst, inq_len,
+                       st, arr_pay, arr_dst, arr_prt, arr_val, r, t, *,
+                       interpret: bool = True):
+    """``ref.router_tick`` as one Pallas kernel with in-place state.
+
+    Same signature/returns as the reference; ``interpret=True`` (the
+    CPU/GPU fallback) runs the kernel through the Pallas interpreter.
+    """
+    from jax.experimental import pallas as pl
+
+    NL, E = spec.n_links, spec.pkt_elems
+    i32 = jnp.int32
+    meta = jnp.stack([r, t]).astype(i32).reshape(1, 2)
+    arr_meta = jnp.stack(
+        [arr_dst.astype(i32), arr_prt.astype(i32), arr_val.astype(i32)])
+    state_in = [_widen(k, st[k]) for k in STATE_KEYS]
+    out_shape = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in state_in]
+    out_shape += [
+        jax.ShapeDtypeStruct((NL, E), inq_pay.dtype),
+        jax.ShapeDtypeStruct((3, NL), i32),
+        jax.ShapeDtypeStruct((1, 1), i32),
+    ]
+    # my_tbl, link_ids, inq_pay, inq_dst, inq_len, meta, arr_pay, arr_meta
+    n_fixed = 8
+    aliases = {n_fixed + i: i for i in range(len(STATE_KEYS))}
+    link_ids = jnp.asarray(spec.link_ids, i32).reshape(1, -1)
+    outs = pl.pallas_call(
+        _make_kernel(spec),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(
+        my_tbl.reshape(1, -1), link_ids, inq_pay, inq_dst,
+        inq_len.reshape(1, -1), meta, arr_pay, arr_meta, *state_in,
+    )
+    new_st = {
+        k: _narrow(k, v, st[k])
+        for k, v in zip(STATE_KEYS, outs[:len(STATE_KEYS)])
+    }
+    snd_pay, snd_meta, pending = outs[len(STATE_KEYS):]
+    return (new_st, snd_pay, snd_meta[0], snd_meta[1], snd_meta[2] > 0,
+            pending[0, 0])

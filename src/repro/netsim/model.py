@@ -72,6 +72,10 @@ class LinkModel:
     injection_base: float = 0.0   # s fixed overhead per transfer
     switch_cycles: float = 4.0    # extra arbiter cycles at R=1 (Tab. 4)
     quant_latency: float = 1.5e-6  # s per hop: compressed-link codec pass
+    #: s per reduction tick the *unfused* static backend pays for the HBM
+    #: round-trip between the collective-permute and the add; the fused
+    #: backend's receive+accumulate kernel elides it (DESIGN.md §3.3/§10)
+    unfused_add_latency: float = 2.5e-7
 
     # -- primitive costs ---------------------------------------------------
 

@@ -67,6 +67,7 @@ class SimReport:
     stalls: int               # link-tick slots lost to full downstream FIFOs
     flit_hops: int            # total flits x hops moved
     byte_hops: float          # total payload bytes x hops moved
+    dropped: int = 0          # flits past a full (rank, port) delivery buffer
 
     def occupancy(self, link) -> float:
         """Fraction of ticks the directed ``link`` carried a flit."""
@@ -104,13 +105,18 @@ def simulate(
     fifo_depth: int | None = None,
     R: int | None = None,
     switch_bubble: bool = False,
+    out_cap: int | None = None,
 ) -> SimReport:
     """Run the schedule to completion and report.
 
     ``fifo_depth`` bounds every transit FIFO (None = unbounded); ``R`` is
     the arbiter's polling stickiness (None = pure round-robin with free
     switching); ``switch_bubble`` burns the link's cycle whenever the
-    arbiter acquires a new input FIFO (the paper's Tab. 4 cost).
+    arbiter acquires a new input FIFO (the paper's Tab. 4 cost);
+    ``out_cap`` bounds every (rank, port) delivery buffer — a flit past it
+    is dropped on arrival and counted in :attr:`SimReport.dropped`, the
+    device router's delivery-overrun semantics (it still counts toward
+    message completion so an undersized buffer can't hang the schedule).
     """
     messages = list(messages)
     routes = [_route_of(m, rt) for m in messages]
@@ -156,6 +162,8 @@ def simulate(
     stalls = 0
     flit_hops = 0
     byte_hops = 0.0
+    dropped = 0
+    out_fill: dict = {}  # (rank, port) -> delivered flits held
 
     total_work = sum(
         m.n_flits * (len(r) - 1) for m, r in zip(messages, routes)
@@ -257,6 +265,12 @@ def simulate(
             # delivery is by path position, not rank value: route-expanded
             # logical chains may revisit a rank before terminating there
             if fl.leg == len(route) - 1:
+                if out_cap is not None:
+                    slot = (route[-1], messages[fl.msg].port)
+                    if out_fill.get(slot, 0) >= out_cap:
+                        dropped += 1
+                    else:
+                        out_fill[slot] = out_fill.get(slot, 0) + 1
                 done_flits[fl.msg] += 1
                 if done_flits[fl.msg] == messages[fl.msg].n_flits:
                     msg_done[fl.msg] = t
@@ -276,6 +290,7 @@ def simulate(
         stalls=stalls,
         flit_hops=flit_hops,
         byte_hops=byte_hops,
+        dropped=dropped,
     )
 
 

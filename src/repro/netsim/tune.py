@@ -176,10 +176,18 @@ def score_plan(topo, rt, op: str, nbytes: int, plan: Plan,
         rounds = collective_rounds(topo, rt, op, plan.algo, nbytes,
                                    n_chunks=plan.n_chunks)
     _, _, reports = simulate_rounds(topo, rt, rounds)
-    return sum(
+    wire_s = sum(
         r.ticks * model.hop_time_wire(r.flit_bytes_max, plan.wire)
         for r in reports
     )
+    # reducing ops fold an accumulate into every schedule tick; the unfused
+    # static backend pays the HBM round-trip between permute and add on each
+    # of them, the fused backend's receive+accumulate kernel does not
+    # (transport/fused.py).  An upper-estimate tick count (every round
+    # charged) is fine: it shifts all unfused plans of one schedule equally.
+    if op in ("reduce", "allreduce") and plan.transport != "fused":
+        wire_s += model.unfused_add_latency * sum(r.ticks for r in reports)
+    return wire_s
 
 
 @dataclass
@@ -216,6 +224,7 @@ class TuningTable:
                 "injection_base": self.model.injection_base,
                 "switch_cycles": self.model.switch_cycles,
                 "quant_latency": self.model.quant_latency,
+                "unfused_add_latency": self.model.unfused_add_latency,
             },
             "entries": [
                 {"op": op, "nbytes": size, **e}
@@ -255,7 +264,7 @@ def topo_signature(topo, rt=None) -> str:
 def autotune(
     topo, rt=None, *,
     ops=OPS, sizes=SIZE_GRID, model: LinkModel | None = None,
-    transports=("static", "packet"), n_chunks_grid=N_CHUNKS_GRID,
+    transports=("static", "packet", "fused"), n_chunks_grid=N_CHUNKS_GRID,
     wires=WIRES,
 ) -> TuningTable:
     """Sweep plans over the (op x size) grid and record the winners.
@@ -265,7 +274,10 @@ def autotune(
     schedule.  The raw static default remains in every candidate set, so
     a compressed plan is only ever recorded when the simulator scores it
     strictly better — compression can win bandwidth-bound cells but never
-    displaces the default on latency-bound ones.
+    displaces the default on latency-bound ones.  The fused backend runs
+    the identical static schedules but skips the per-tick unfused-add cost
+    on reducing ops; ties (ops with no accumulate) keep the static default
+    via the strict-< argmin.
     """
     from ..core.routing import compute_route_table  # lazy: keep import light
 

@@ -119,13 +119,20 @@ class Transport(abc.ABC):
         """Ring shift of ``x`` by ``step`` along the linearised ranks."""
         return self.permute(x, comm, comm.ring_perm(step))
 
+    def accumulate(self, a, b):
+        """Elementwise ``a + b`` over a pytree — the reduction-combine hook.
+        The fused backend overrides this with its tiled Pallas add so
+        collective fold steps run on the fused datapath even when the shift
+        and the add are not adjacent (the channel layer's pop-reduce).
+        Must equal plain ``+`` bit-for-bit in f32."""
+        return jax.tree.map(lambda x, y: x + y, a, b)
+
     def shift_accumulate(self, x, addend, comm, step: int = 1):
         """Hot-path hook for the ring-reduce inner loop:
         ``shift(x) + addend`` — backends may fuse the add into the
         receive (the fused backend's Pallas kernel).  Must equal the
         unfused composition bit-for-bit in f32."""
-        return jax.tree.map(lambda a, b: a + b,
-                            self.shift(x, comm, step), addend)
+        return self.accumulate(self.shift(x, comm, step), addend)
 
     def send_contribution(self, c, comm, step: int = 1):
         """Ship one rank-local contribution a logical ring distance

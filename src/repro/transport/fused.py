@@ -82,12 +82,16 @@ class FusedTransport(StaticTransport):
     def _fuse(self) -> bool:
         return on_tpu() if self.use_pallas is None else self.use_pallas
 
-    def shift_accumulate(self, x, addend, comm, step: int = 1):
-        moved = self.shift(x, comm, step)
+    def accumulate(self, a, b):
+        """Tiled-VMEM add: every reduction-combine the collective layer
+        routes through :meth:`Transport.accumulate` lands on the kernel,
+        not just the shift-adjacent one."""
         if not (self._fuse() or self.interpret):
-            return jax.tree.map(lambda a, b: a + b, moved, addend)
+            return jax.tree.map(lambda x, y: x + y, a, b)
         return jax.tree.map(
-            lambda a, b: fused_accumulate(a, b, interpret=self.interpret),
-            moved,
-            addend,
+            lambda x, y: fused_accumulate(x, y, interpret=self.interpret),
+            a, b,
         )
+
+    def shift_accumulate(self, x, addend, comm, step: int = 1):
+        return self.accumulate(self.shift(x, comm, step), addend)

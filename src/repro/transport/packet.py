@@ -64,6 +64,23 @@ def _decode(vec: jax.Array, shape, dtype) -> jax.Array:
 
 # ------------------------------------------------------------- transport
 
+#: router-table cache bound: the key includes the route table's bytes, so a
+#: long-lived transport sweeping topologies would otherwise grow without
+#: limit.  8 comfortably covers a working set of fabrics in flight.
+TBL_CACHE_MAX = 8
+
+
+def lru_get(cache: dict, key, make, cap: int = TBL_CACHE_MAX):
+    """Tiny LRU on a plain (insertion-ordered) dict: hit moves the entry to
+    the back; a miss past ``cap`` evicts the front (least recent)."""
+    if key in cache:
+        cache[key] = cache.pop(key)  # refresh recency
+        return cache[key]
+    while len(cache) >= max(int(cap), 1):
+        cache.pop(next(iter(cache)))
+    val = cache[key] = make()
+    return val
+
 
 @register_transport("packet")
 @dataclass
@@ -72,7 +89,9 @@ class PacketTransport(Transport):
 
     ``pkt_elems`` scales the paper's 28 B network packet to a TPU-friendly
     payload; ``slack_steps`` pads the static delivery-time bound (left at
-    the default it simply costs a few bubble cycles).
+    the default it simply costs a few bubble cycles).  ``router_impl``
+    picks the router datapath (``core/router.py``: "scalar" | "vector" |
+    "pallas"; None auto-selects pallas on TPU, vector elsewhere).
     """
 
     pkt_elems: int = 32
@@ -81,6 +100,7 @@ class PacketTransport(Transport):
     #: deliberately undersized queue to prove the overflow counter fires)
     transit_cap: int | None = None
     runtime_stats: bool = True
+    router_impl: str | None = None
     _tbl_cache: dict = field(default_factory=dict, repr=False)
 
     # -- routing-table + schedule bounds (static, per communicator) ------
@@ -100,16 +120,15 @@ class PacketTransport(Transport):
             comm.topology.links,
             comm.route_table.next_hop.tobytes(),
         )
-        if key not in self._tbl_cache:
-            # derive from the communicator's own route table so the router
-            # follows exactly the paths _bounds() analysed (a comm created
-            # with routing_scheme="bfs" must not get fresh DOR routes)
-            self._tbl_cache[key] = np.asarray(
-                make_router_tables(
-                    comm.topology, self._phys_dims(comm), rt=comm.route_table
-                )
+        # derive from the communicator's own route table so the router
+        # follows exactly the paths _bounds() analysed (a comm created
+        # with routing_scheme="bfs" must not get fresh DOR routes)
+        tbl = lru_get(self._tbl_cache, key, lambda: np.asarray(
+            make_router_tables(
+                comm.topology, self._phys_dims(comm), rt=comm.route_table
             )
-        return jnp.asarray(self._tbl_cache[key])
+        ))
+        return jnp.asarray(tbl)
 
     def _bounds(self, comm, active_pairs, n_packets: int):
         """(n_steps, transit_cap): static worst-case delivery bounds.
@@ -192,7 +211,7 @@ class PacketTransport(Transport):
         )
         out_pay, out_cnt, ovf, _ = run_router(
             cfg, comm, self._route_table(comm), pay, inq_dst, inq_len,
-            n_steps,
+            n_steps, impl=self.router_impl,
         )
         self._guard_runtime_reuse(ovf)
         self.tally(n_steps, tree_bytes(x))
@@ -221,3 +240,16 @@ class PacketTransport(Transport):
         if src == dst:
             return x
         return self.permute(x, comm, [(src, dst)])
+
+
+@register_transport("packet:pallas")
+@dataclass
+class PallasPacketTransport(PacketTransport):
+    """The packet backend pinned to the Pallas tick kernel
+    (``kernels/router``): the router's FIFO/arbiter state is updated in
+    place inside one ``pallas_call`` per tick (VMEM-resident on TPU;
+    interpreter fallback elsewhere).  The bare ``"packet"`` key already
+    auto-selects this datapath on TPU — this key forces it everywhere,
+    which is how the equivalence tests drive the kernel on CPU."""
+
+    router_impl: str | None = "pallas"

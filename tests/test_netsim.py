@@ -419,3 +419,55 @@ def test_collective_round_tick_counts():
     # binomial tree: ceil(log2 P) rounds, each >= 1 tick
     rounds = collective_rounds(topo, rt, "bcast", "tree", 4096.0)
     assert len(rounds) == 3
+
+
+# ---------------------------------------------------------------------------
+# fused fast path in the tuner + delivery-buffer bound in the simulator
+# ---------------------------------------------------------------------------
+
+
+def test_autotuner_selects_fused_for_reducing_ops_only():
+    """The fused backend runs the identical static schedules minus the
+    per-tick unfused-add cost, so it must win every raw reduce/allreduce
+    cell — and must NOT displace static on ops with no accumulate (ties
+    keep the default via the strict-< argmin)."""
+    table = autotune(Topology.ring(8))
+    for (op, size), e in table.entries.items():
+        if op in ("reduce", "allreduce") and e["wire"] == "raw":
+            assert e["transport"] == "fused", (op, size, e)
+        if op in ("p2p", "bcast", "halo"):
+            assert e["transport"] != "fused", (op, size, e)
+
+
+def test_tuning_table_json_carries_unfused_add_latency(tmp_path):
+    table = autotune(Topology.ring(8), sizes=(1 << 12,))
+    p = tmp_path / "t.json"
+    table.save(str(p))
+    back = TuningTable.load(str(p))
+    assert back.model.unfused_add_latency == table.model.unfused_add_latency
+    # older tables without the key still load (field default applies)
+    import json as _json
+
+    spec = _json.loads(table.to_json())
+    del spec["model"]["unfused_add_latency"]
+    legacy = TuningTable.from_json(_json.dumps(spec))
+    assert legacy.model.unfused_add_latency == LinkModel().unfused_add_latency
+
+
+def test_sim_out_cap_counts_delivery_drops():
+    """An undersized (rank, port) delivery buffer drops the surplus flits
+    and reports them — the simulator-side mirror of the device router's
+    out_cap overrun semantics."""
+    topo = Topology.ring(8)
+    from repro.core.routing import compute_route_table
+
+    rt = compute_route_table(topo)
+    # three senders, one flit each, all delivering to rank 0 / port 0
+    msgs = [Message(src=s, dst=0, n_flits=1, flit_bytes=64.0)
+            for s in (1, 2, 3)]
+    free = simulate(topo, rt, msgs)
+    assert free.dropped == 0
+    tight = simulate(topo, rt, msgs, out_cap=1)
+    assert tight.dropped == 2
+    # drops never stall completion: every message still reports done
+    assert all(d >= 0 for d in tight.msg_done)

@@ -210,3 +210,52 @@ def test_model_layer_helper_over_backends(mode, devices8):
         ))
         out[m] = np.asarray(f(x, w))
     np.testing.assert_allclose(out[mode], out["bulk"], rtol=1e-5, atol=1e-5)
+
+
+def test_tbl_cache_is_bounded_lru():
+    from repro.transport.packet import TBL_CACHE_MAX, lru_get
+
+    cache: dict = {}
+    calls = []
+    for i in range(TBL_CACHE_MAX + 4):
+        lru_get(cache, i, lambda i=i: calls.append(i) or i * 10)
+    assert len(cache) == TBL_CACHE_MAX
+    assert 0 not in cache and 3 not in cache  # oldest evicted
+    # a hit refreshes recency instead of rebuilding
+    n_calls = len(calls)
+    oldest = next(iter(cache))
+    assert lru_get(cache, oldest, lambda: None) == oldest * 10
+    assert len(calls) == n_calls
+    # ...so the refreshed key survives the next eviction round
+    lru_get(cache, "new", lambda: "v")
+    assert oldest in cache
+
+
+def test_packet_pallas_registry_and_equivalence(devices8):
+    """"packet:pallas" pins the router to the Pallas tick kernel; it must
+    resolve as a first-class transport key (comm modes included) and move
+    the exact bytes the scalar-reference packet backend moves."""
+    from repro.transport.packet import PallasPacketTransport
+
+    t = get_transport("packet:pallas")
+    assert isinstance(t, PallasPacketTransport)
+    assert t.router_impl == "pallas"
+    assert resolve_comm_mode("smi:packet:pallas") == ("smi", "packet:pallas")
+
+    mesh, comm, spec = TOPOLOGIES["torus"]()
+    x = jnp.asarray(np.random.RandomState(7).randn(8, 12), jnp.float32)
+    pairs = [(i, (i + 3) % 8) for i in range(8)]
+
+    def run(key):
+        def fn(v):
+            tp = get_transport(key, pkt_elems=8)
+            y = tp.permute(v[0], comm, pairs)
+            return y[None], jnp.asarray(tp.stats.overflow, jnp.int32)[None]
+
+        return jax.tree.map(np.asarray, jax.jit(jax.shard_map(
+            fn, mesh=mesh, in_specs=spec, out_specs=(spec, spec)))(x))
+
+    ref, ovf_ref = run("packet")
+    got, ovf = run("packet:pallas")
+    assert int(ovf_ref.sum()) == 0 and int(ovf.sum()) == 0
+    np.testing.assert_array_equal(ref, got)
