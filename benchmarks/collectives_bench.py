@@ -37,6 +37,7 @@ from repro.core import (
     tree_bcast,
     tree_reduce,
 )
+from repro.obs.metrics import REGISTRY
 from .common import (
     ICI_BW,
     V5E_MODEL,
@@ -131,8 +132,10 @@ def run(transports=("static", "packet", "fused", "compressed"),
             # collective where the fused backend's kernel actually runs
             if topo == "torus":
                 for tname in transports:
-                    fn = (lambda v, c=comm, tn=tname: open_allreduce_channel(
-                        c, port=None, transport=make_bench_transport(tn),
+                    tp = make_bench_transport(tname)
+                    REGISTRY.track(f"allreduce/{tname}", tp)
+                    fn = (lambda v, c=comm, t=tp: open_allreduce_channel(
+                        c, port=None, transport=t,
                     ).transfer(v[0])[None])
                     f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("x"),
                                               out_specs=P("x")))
@@ -178,11 +181,22 @@ def main(argv=None):
     )
     ap.add_argument("--sizes", default="4,8,11",
                     help="comma-separated log2(KB) message sizes")
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="record obs events and write a Chrome trace to OUT")
     args = ap.parse_args(argv)
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable(capacity=1 << 20)
     run(
         transports=tuple(args.transport.split(",")),
         sizes=tuple(int(s) for s in args.sizes.split(",")),
     )
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        from repro.obs.export import write_chrome_trace
+        tracer = obs_trace.disable()
+        n_ev = write_chrome_trace(args.trace, tracer.events() if tracer else [])
+        print(f"# wrote {n_ev} trace events to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -10,9 +10,13 @@ come from launch/dryrun.py + launch/roofline.py instead.
 
 ``--json`` writes every row machine-readably (suite, name, params,
 us_per_call, derived) for BENCH_*.json perf-trajectory files (DESIGN.md
-§6).  ``--validate-sim`` makes the suites that have a netsim prediction
-(latency, bandwidth, injection) assert prediction-vs-measurement agreement
-within 2x — the simulator/measurement drift gate CI runs.
+§6), plus a ``metrics`` snapshot of every transport the suites registered
+with :mod:`repro.obs.metrics` (drift gauges included).  ``--validate-sim``
+makes the suites that have a netsim prediction (latency, bandwidth,
+injection) assert prediction-vs-measurement agreement within 2x — the
+simulator/measurement drift gate CI runs.  ``--trace out.json`` records
+channel/router/tuner events for the whole run and writes a Chrome-trace
+file loadable in Perfetto (DESIGN.md §11).
 """
 
 import argparse
@@ -43,7 +47,12 @@ def main() -> None:
                     help="write machine-readable results to OUT")
     ap.add_argument("--validate-sim", action="store_true",
                     help="assert netsim predictions within 2x of measurement")
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="record obs events and write a Chrome trace to OUT")
     args = ap.parse_args()
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable(capacity=1 << 20)
     todo = args.only.split(",") if args.only else SUITES
     failures = []
     results = []
@@ -72,7 +81,14 @@ def main() -> None:
             print(f"# {name} FAILED: {e}", flush=True)
         for row in common.RESULTS[n0:]:
             results.append({"suite": name, **row})
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        from repro.obs.export import write_chrome_trace
+        tracer = obs_trace.disable()
+        n_ev = write_chrome_trace(args.trace, tracer.events() if tracer else [])
+        print(f"# wrote {n_ev} trace events to {args.trace}")
     if args.json:
+        from repro.obs.metrics import REGISTRY
         # written before the exit-code decision: a red run still leaves
         # its partial rows on disk for the perf-trajectory diff
         with open(args.json, "w") as f:
@@ -81,6 +97,7 @@ def main() -> None:
                 "validate_sim": args.validate_sim,
                 "failures": failures,
                 "rows": results,
+                "metrics": REGISTRY.snapshot(),
             }, f, indent=1)
         print(f"# wrote {len(results)} rows to {args.json}")
     if failures:

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.apps import DistributedStencil
 from repro.netsim import calibrate
+from repro.obs.metrics import REGISTRY
 
 from .common import (
     HBM_BW,
@@ -110,6 +111,8 @@ def _overlap_sweep(transports, validate_sim):
                 f"stencil_overlap,{domain[0]}x{domain[1]},{tname},{sched}",
                 t * 1e6, f"v5e_model_us={window * steps * 1e6:.1f}",
             )
+            if sched == "ovl":
+                REGISTRY.track(f"stencil/{tname}", tp)
             if validate_sim and sched == "ovl":
                 # exactness gate: traced halo counters == netsim prediction
                 kw = {"pkt_elems": tp.pkt_elems} if tname == "packet" else {}
@@ -118,6 +121,8 @@ def _overlap_sweep(transports, validate_sim):
                 )
                 got = tp.stats.tag_counts("halo")
                 got = (got[0] // steps, got[1] // steps)
+                REGISTRY.drift(f"stencil/{tname}/halo_bytes",
+                               predicted=pred[1], measured=got[1])
                 assert got == pred, (
                     f"halo stats drift[{tname}]: traced/step {got} != "
                     f"predicted {pred}"
@@ -159,7 +164,11 @@ def _overlap_sweep(transports, validate_sim):
         csv_row(f"stencil_halo_exchange,{size}x{size}", t * 1e6,
                 f"v5e_model_us={capp.halo_schedule.predicted_time((size, size)) * 1e6:.2f}")
     if validate_sim:
-        calibrate.validate(records, tol=2.0, label="stencil_halo")
+        m, _worst = calibrate.validate(records, tol=2.0, label="stencil_halo")
+        # the drift gauges recompute validate's ratios through the same
+        # drift_ratio formula, so the snapshot can never disagree with the
+        # gate that just passed
+        REGISTRY.drift_from_records("stencil_halo", records, model=m)
 
 
 def run(transports=("static", "packet", "fused", "compressed"),

@@ -114,6 +114,26 @@ def main():
                                    atol=bound)
     print("compressed-link broadcast ✓ (int8 wire, within codec bound)")
 
+    # ---- tracing a channel (DESIGN.md §11) ------------------------------
+    # The obs tracer records channel open/transfer/close events while the
+    # program traces; repro.obs.export renders them (plus netsim-predicted
+    # link timelines) as a Chrome trace that loads in Perfetto.  Off by
+    # default — a disabled tracer costs one attribute load per call site.
+    from repro.obs import trace as obs_trace
+    from repro.obs.export import to_chrome_trace
+
+    with obs_trace.enabled(capacity=4096) as tracer:
+        # a fresh lambda is a fresh jit cache entry, so the channel traces
+        # again and the tracer sees its events
+        jax.jit(jax.shard_map(
+            lambda v: open_channel(comm, src=SRC, dst=DST, port=None,
+                                   n_chunks=8).transfer(v[0])[None],
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))(msg)
+        events = tracer.events()
+    doc = to_chrome_trace(events)
+    print(f"traced {len(events)} channel events {sorted(tracer.kinds())} "
+          f"-> {len(doc['traceEvents'])} viewer records")
+
 
 if __name__ == "__main__":
     main()

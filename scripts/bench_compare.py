@@ -28,7 +28,11 @@ the threshold (default 1.5x):
 Usage:
     python scripts/bench_compare.py BASELINE.json FRESH.json \\
         [--threshold 1.5] [--measured-threshold 4.0] \\
-        [--measured-min-cells 3] [--raw-measured]
+        [--measured-min-cells 3] [--raw-measured] [--json deltas.json]
+
+Always prints the per-cell delta table (cell, baseline, current, ratio,
+verdict) so CI logs show *which* cells moved; ``--json`` writes the same
+table machine-readably.
 
 Rows present in only one file are reported but never fail the gate
 (benchmarks get added and retired; the trajectory continues).
@@ -71,9 +75,11 @@ def compare(base_rows, fresh_rows, *, threshold: float,
             measured_threshold: float | None = None,
             measured_min_cells: int = 3,
             raw_measured: bool = False):
-    """Returns (regressions, notes): regressions is a list of human-readable
-    gate violations, notes a list of informational lines (row churn and
-    uncorroborated measured spikes)."""
+    """Returns (regressions, notes, norm, n_shared, cells): regressions is a
+    list of human-readable gate violations, notes a list of informational
+    lines (row churn and uncorroborated measured spikes), and cells the full
+    per-cell delta table (one record per model/measured comparison with its
+    verdict) for the summary printout and the JSON report."""
     shared = sorted(set(base_rows) & set(fresh_rows))
     only_base = sorted(set(base_rows) - set(fresh_rows))
     only_fresh = sorted(set(fresh_rows) - set(base_rows))
@@ -82,6 +88,7 @@ def compare(base_rows, fresh_rows, *, threshold: float,
         *(f"row added (fresh only): {k}" for k in only_fresh),
     ]
     regressions = []
+    cells = []
     m_thresh = measured_threshold if measured_threshold is not None \
         else threshold
 
@@ -94,10 +101,16 @@ def compare(base_rows, fresh_rows, *, threshold: float,
 
     measured_hits = []
     for k in shared:
+        cell_name = ",".join(str(p) for p in k if p)
         # model cells: deterministic, raw-gated
         mb, mf = model_us(base_rows[k]), model_us(fresh_rows[k])
         if mb is not None and mf is not None and mb > 0:
             r = mf / mb
+            verdict = "REGRESS" if r > threshold else "OK"
+            cells.append({
+                "cell": cell_name, "kind": "model", "baseline_us": mb,
+                "current_us": mf, "ratio": r, "verdict": verdict,
+            })
             if r > threshold:
                 regressions.append(
                     f"MODEL {k}: {mb:.1f}us -> {mf:.1f}us ({r:.2f}x > "
@@ -106,8 +119,14 @@ def compare(base_rows, fresh_rows, *, threshold: float,
         # measured cells: machine-speed-normalised
         if k in meas_ratios:
             r = meas_ratios[k] / norm
-            if r > m_thresh:
-                b, f = base_rows[k]["us_per_call"], fresh_rows[k]["us_per_call"]
+            b, f = base_rows[k]["us_per_call"], fresh_rows[k]["us_per_call"]
+            hit = r > m_thresh
+            cells.append({
+                "cell": cell_name, "kind": "measured", "baseline_us": b,
+                "current_us": f, "ratio": meas_ratios[k], "norm_ratio": r,
+                "verdict": "WARN" if hit else "OK",
+            })
+            if hit:
                 measured_hits.append(
                     f"MEASURED {k}: {b:.1f}us -> {f:.1f}us "
                     f"({meas_ratios[k]:.2f}x raw, {r:.2f}x vs suite median "
@@ -115,15 +134,38 @@ def compare(base_rows, fresh_rows, *, threshold: float,
                 )
     # a real regression hits a coherent group of cells; isolated wall-time
     # spikes are CI noise — warn, don't fail
-    if len(measured_hits) >= measured_min_cells:
+    gated = len(measured_hits) >= measured_min_cells
+    if gated:
         regressions.extend(measured_hits)
+        for c in cells:
+            if c["verdict"] == "WARN":
+                c["verdict"] = "REGRESS"
     else:
         notes.extend(
             f"isolated measured spike (not gated, "
             f"{len(measured_hits)} < {measured_min_cells} cells): {h}"
             for h in measured_hits
         )
-    return regressions, notes, norm, len(shared)
+    return regressions, notes, norm, len(shared), cells
+
+
+def print_cell_table(cells, *, norm: float) -> None:
+    """Aligned per-cell delta summary: which cells moved, by how much, and
+    what the gate decided — so a red CI log names the culprits directly."""
+    if not cells:
+        return
+    w = max(len(c["cell"]) for c in cells)
+    print(f"# {'cell':<{w}} {'kind':<8} {'baseline':>12} {'current':>12} "
+          f"{'ratio':>7} {'vs-med':>7}  verdict")
+    for c in sorted(cells, key=lambda c: (-c.get("norm_ratio", c["ratio"]))):
+        nr = c.get("norm_ratio")
+        print(f"# {c['cell']:<{w}} {c['kind']:<8} "
+              f"{c['baseline_us']:>10.1f}us {c['current_us']:>10.1f}us "
+              f"{c['ratio']:>6.2f}x "
+              + (f"{nr:>6.2f}x" if nr is not None else f"{'-':>7}")
+              + f"  {c['verdict']}")
+    print(f"# (measured vs-med column normalised by suite median "
+          f"{norm:.2f}x)")
 
 
 def main(argv=None) -> int:
@@ -146,6 +188,8 @@ def main(argv=None) -> int:
     ap.add_argument("--raw-measured", action="store_true",
                     help="gate measured cells on raw ratios (same-machine "
                          "comparisons only)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the per-cell delta table + verdicts to OUT")
     args = ap.parse_args(argv)
 
     base_rows, base = load_rows(args.baseline)
@@ -155,7 +199,7 @@ def main(argv=None) -> int:
               f"{fresh['failures']} — gate FAILED")
         return 1
 
-    regressions, notes, norm, n_shared = compare(
+    regressions, notes, norm, n_shared, cells = compare(
         base_rows, fresh_rows, threshold=args.threshold,
         measured_threshold=args.measured_threshold,
         measured_min_cells=args.measured_min_cells,
@@ -163,9 +207,20 @@ def main(argv=None) -> int:
     )
     for line in notes:
         print(f"[bench-compare] note: {line}")
+    print_cell_table(cells, norm=norm)
     print(f"[bench-compare] {n_shared} shared cells; suite-median measured "
           f"ratio {norm:.2f}x; thresholds: model {args.threshold:.2f}x, "
           f"measured {args.measured_threshold:.2f}x")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "cells": cells,
+                "norm": norm,
+                "regressions": regressions,
+                "notes": notes,
+                "ok": bool(n_shared) and not regressions,
+            }, f, indent=1)
+        print(f"[bench-compare] wrote {len(cells)} cell deltas to {args.json}")
     if n_shared == 0:
         # zero overlap means the gate compared nothing: a wrong baseline
         # path or wholesale row-key churn must not read as green

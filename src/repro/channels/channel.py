@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.comm import Communicator, PortAllocator
+from ..obs import trace as obs
 from .spec import ChannelSpec
 
 #: the package-level default allocator open_* claims ports from
@@ -71,6 +72,9 @@ class _ChannelBase:
 
     def close(self):
         """Release the channel's port claim (idempotent)."""
+        if obs.TRACING:
+            obs.emit("channel.close", tag=self.spec.stats_tag,
+                     port=self.spec.port, channel_kind=self.spec.kind)
         self.spec.release_port()
 
     def __enter__(self):
@@ -143,6 +147,9 @@ class Channel(_ChannelBase):
         :meth:`pop` (the schedule's pipeline advance).  Pipelines to one
         advance per loop iteration — the ii=1 requirement of §3.1.1.
         """
+        if obs.TRACING:
+            obs.emit("channel.push", tag=self.spec.stats_tag,
+                     port=self.spec.port, src=self.spec.src)
         r = self.spec.comm.rank()
         at_src = r == self.spec.src
         new_pipe = _mask_sel(
@@ -170,6 +177,9 @@ class Channel(_ChannelBase):
         invalid, the documented min(count, pushed) validity cap.
         """
         spec = self.spec
+        if obs.TRACING:
+            obs.emit("channel.pop", tag=spec.stats_tag, port=spec.port,
+                     dst=spec.dst, hops=spec.hops)
         r = spec.comm.rank()
         pairs = spec.comm.path_perm(spec.path)
         t = spec.step_transport()
@@ -203,9 +213,18 @@ class Channel(_ChannelBase):
         pushes + pops, dispatched to the pipelined transfer engine."""
         spec = self.spec
         t, nc = self._resolve_transfer(x, n_chunks, "p2p")
+        if obs.TRACING:
+            obs.emit("channel.transfer.start", tag=spec.stats_tag,
+                     port=spec.port, src=spec.src, dst=spec.dst,
+                     nbytes=int(x.size) * x.dtype.itemsize,
+                     n_chunks=int(nc), transport=t.name)
         with _tagged(t, spec.stats_tag):
-            return t.p2p(x, src=spec.src, dst=spec.dst, comm=spec.comm,
-                         n_chunks=nc)
+            y = t.p2p(x, src=spec.src, dst=spec.dst, comm=spec.comm,
+                      n_chunks=nc)
+        if obs.TRACING:
+            obs.emit("channel.transfer.finish", tag=spec.stats_tag,
+                     port=spec.port, src=spec.src, dst=spec.dst)
+        return y
 
 
 def open_channel(
@@ -242,6 +261,10 @@ def open_channel(
         ),
         allocator,
     )
+    if obs.TRACING:
+        obs.emit("channel.open", tag=spec.stats_tag, port=spec.port,
+                 channel_kind="p2p", src=src, dst=dst, count=count,
+                 wire=wire)
     return Channel(
         spec=spec,
         pipe=_pvary(jnp.zeros(elem_shape, dtype), comm),

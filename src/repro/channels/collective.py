@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.comm import Communicator, PortAllocator
+from ..obs import trace as obs
 from .channel import _ChannelBase, _claim, _mask_sel, _pvary, _tagged
 from .spec import ChannelSpec
 
@@ -105,6 +106,9 @@ class CollectiveChannel(_ChannelBase):
         stays uniform.
         """
         kind = self.spec.kind
+        if obs.TRACING:
+            obs.emit("channel.push", tag=self.spec.stats_tag,
+                     port=self.spec.port, channel_kind=kind)
         P = self.spec.comm.size
         if kind in ("bcast", "reduce"):
             # consumption pointer of this rank's FIFO: the root/injector
@@ -139,6 +143,9 @@ class CollectiveChannel(_ChannelBase):
         elements (root only); allreduce: the next reduced element (every
         rank).  ``valid`` gates warm-up, drain and pipeline bubbles.
         """
+        if obs.TRACING:
+            obs.emit("channel.pop", tag=self.spec.stats_tag,
+                     port=self.spec.port, channel_kind=self.spec.kind)
         return getattr(self, f"_pop_{self.spec.kind}")()
 
     # bcast: pipelined chain, validity in-band ---------------------------
@@ -301,6 +308,18 @@ class CollectiveChannel(_ChannelBase):
         backend and stats tag — bit-identical to the direct call on every
         backend.  Extra kwargs forward to the underlying schedule
         (``bidir=``, the reduce ``op`` defaults to the spec's)."""
+        spec = self.spec
+        if obs.TRACING:
+            obs.emit("channel.transfer.start", tag=spec.stats_tag,
+                     port=spec.port, channel_kind=spec.kind,
+                     nbytes=int(x.size) * x.dtype.itemsize)
+        y = self._transfer_impl(x, n_chunks, **kw)
+        if obs.TRACING:
+            obs.emit("channel.transfer.finish", tag=spec.stats_tag,
+                     port=spec.port, channel_kind=spec.kind)
+        return y
+
+    def _transfer_impl(self, x, n_chunks, **kw):
         from ..core import collectives as C
 
         spec = self.spec
@@ -362,6 +381,9 @@ def _open(kind: str, comm: Communicator, *, count, root, port, elem_shape,
         ),
         allocator,
     )
+    if obs.TRACING:
+        obs.emit("channel.open", tag=spec.stats_tag, port=spec.port,
+                 channel_kind=kind, root=root, count=count, wire=wire)
     P = comm.size
     z = jnp.zeros
     if kind == "bcast":

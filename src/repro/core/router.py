@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..obs import trace as obs
 from .comm import Communicator
 from .routing import compute_route_table, physical_link_map
 from .streaming import _pvary
@@ -226,6 +227,10 @@ def run_router(
         # degenerate fabrics (no links) and exotic wire dtypes keep the
         # reference path; the packetised wire is always f32
         impl = "scalar"
+    if obs.TRACING:
+        obs.emit("router.run", impl=impl, n_steps=int(n_steps),
+                 n_links=len(links), n_ports=int(cfg.n_ports),
+                 dims=list(cfg.dims))
     if impl == "scalar":
         return _run_router_scalar(
             cfg, comm, route_tbl, inq_pay, inq_dst, inq_len, n_steps, links)
@@ -491,6 +496,10 @@ def _run_router_vector(
     B = max(1, min(int(req), int(n_steps)))
     while n_steps % B:
         B -= 1
+    if obs.TRACING:
+        obs.emit("router.tick_batch", batch=int(B),
+                 n_batches=int(n_steps) // int(B), lane_live=bool(lane_live))
+        obs.emit("router.drain", mode="lane" if lane_live else "psum")
 
     # early exit without while_loop: a scan over n_steps // B batches
     # whose body is a cond — once the pending lane reports the network

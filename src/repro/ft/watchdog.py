@@ -5,6 +5,8 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
+from ..obs import trace as obs
+
 
 @dataclass
 class StepWatchdog:
@@ -24,12 +26,22 @@ class StepWatchdog:
 
     def lap(self, step: int) -> bool:
         now = time.monotonic()
-        dt = now - (self._last if self._last is not None else now)
+        if self._last is None:
+            # lap() before start(): no real interval exists yet — arm the
+            # timer and skip both the straggler check and EMA seeding (a
+            # dt = now - now = 0 seed would make every later step satisfy
+            # dt > threshold * 0 and flag as a straggler forever)
+            self._last = now
+            return False
+        dt = now - self._last
         self._last = now
         slow = False
         if self.ema is not None and dt > self.threshold * self.ema:
             slow = True
             self.events.append({"step": step, "dt": dt, "ema": self.ema})
+            if obs.TRACING:
+                obs.emit("ft.straggler", tag="ft", step=step, dt=dt,
+                         ema=self.ema, threshold=self.threshold)
         self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
         return slow
 
@@ -60,3 +72,6 @@ def run_with_restarts(
             restored, manifest = checkpointer.restore(state_like)
             state = restored
             step = manifest["step"]
+            if obs.TRACING:
+                obs.emit("ft.restart", tag="ft", restart=restarts,
+                         resume_step=step, max_restarts=max_restarts)

@@ -8,6 +8,15 @@ single-rank sweep, and prints measured vs LinkModel-predicted step times.
         --comm-mode smi:compressed --steps 8
     PYTHONPATH=src python -m repro.launch.stencil --grid 2x4 \\
         --domain 512x512 --no-overlap --json out.json
+    PYTHONPATH=src python -m repro.launch.stencil --trace trace.json \\
+        --metrics metrics.json
+
+``--trace`` writes a Chrome-trace / Perfetto file with one lane per rank
+(measured steps), one lane per directed link (the netsim-predicted halo
+flit timeline), and the channel/halo schedule events recorded while
+tracing the program — the predicted-vs-measured overlay of DESIGN.md §11.
+``--metrics`` snapshots the obs metrics registry (halo transport counters
+per tag + the wall-vs-model drift gauge) to JSON.
 """
 
 import os
@@ -46,6 +55,12 @@ def main(argv=None):
                     help="run the non-overlapped reference schedule")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write machine-readable results to OUT")
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="write a Chrome trace (rank lanes + per-link "
+                         "netsim-predicted overlay) to OUT")
+    ap.add_argument("--metrics", default=None, metavar="OUT",
+                    help="write an obs metrics snapshot (transport "
+                         "counters + drift gauges) to OUT")
     args = ap.parse_args(argv)
 
     from ..apps import DistributedStencil
@@ -71,7 +86,14 @@ def main(argv=None):
     mesh = app.make_mesh()
     overlapped = not args.no_overlap
 
-    f = app.jitted(mesh, n_steps=steps, overlapped=overlapped)
+    if args.trace:
+        from ..obs import trace as obs_trace
+        obs_trace.enable(capacity=1 << 18)
+    # an explicit transport instance (rather than the spec's lazy resolve)
+    # lets the metrics registry snapshot the traced per-tag counters;
+    # plan=auto must keep resolving per tile size, so it stays lazy
+    tp = app.halo_schedule.resolve_transport() if args.plan != "auto" else None
+    f = app.jitted(mesh, n_steps=steps, overlapped=overlapped, transport=tp)
     got = np.asarray(jax.block_until_ready(f(tiles)))  # compile + warm
     t0 = time.perf_counter()
     jax.block_until_ready(f(tiles))
@@ -94,6 +116,47 @@ def main(argv=None):
     print(f"[stencil] wall={wall * 1e6:.1f}us  "
           f"v5e_model_halo={model_s * 1e6:.1f}us  max|err|={err:.3g} "
           f"{'OK' if ok else 'MISMATCH'}")
+
+    from ..obs.metrics import REGISTRY
+    if tp is not None:
+        REGISTRY.track("halo", tp)
+    REGISTRY.drift("stencil/wall_vs_model", predicted=model_s, measured=wall)
+
+    if args.trace:
+        from ..netsim.schedule import halo_rounds, halo_slab_elems
+        from ..netsim.sim import simulate
+        from ..obs import trace as obs_trace
+        from ..obs.export import sim_report_events, write_chrome_trace
+
+        tracer = obs_trace.disable()
+        events = list(tracer.events()) if tracer else []
+        # measured rank lanes: SPMD lockstep means every rank ran the same
+        # schedule — split the timed wall across steps, one lane per rank
+        per_step = wall / max(steps, 1)
+        for r in range(app.comm.size):
+            for s in range(steps):
+                events.append({
+                    "ts": s * per_step, "rank": r, "kind": "run.step",
+                    "tag": mode_label, "port": None,
+                    "attrs": {"dur": per_step, "step": s},
+                })
+        # predicted overlay: replay the halo rounds through the tick
+        # simulator with the move log on, one lane per directed link
+        ns_e, ew_e = halo_slab_elems((nx, ny))
+        reports = [
+            simulate(app.comm.topology, app.comm.route_table, msgs,
+                     trace=True)
+            for msgs in halo_rounds(grid, ns_e * 4, ew_e * 4)
+        ]
+        n_ev = write_chrome_trace(args.trace, events + sim_report_events(
+            app.comm.topology, reports, wire="int8" if lossy else "raw",
+        ))
+        print(f"[stencil] wrote {n_ev} trace events to {args.trace}")
+
+    if args.metrics:
+        with open(args.metrics, "w") as fm:
+            json.dump(REGISTRY.snapshot(), fm, indent=1)
+        print(f"[stencil] wrote metrics snapshot to {args.metrics}")
     if args.json:
         with open(args.json, "w") as fjs:
             json.dump({
@@ -101,6 +164,7 @@ def main(argv=None):
                 "comm_mode": mode_label, "schedule": sched,
                 "wall_us": wall * 1e6, "v5e_model_halo_us": model_s * 1e6,
                 "max_err": err, "ok": bool(ok),
+                "metrics": REGISTRY.snapshot(),
             }, fjs, indent=1)
     return 0 if ok else 1
 

@@ -17,6 +17,18 @@ from __future__ import annotations
 from .model import LinkModel
 
 
+def drift_ratio(predicted: float, measured: float) -> float:
+    """Symmetric prediction-vs-measurement ratio (1.0 = perfect).
+
+    The single formula behind the ``--validate-sim`` gate AND the
+    ``drift/*`` gauges of :mod:`repro.obs.metrics` — factored out so the
+    continuously-sampled metric can never disagree with the bench gate.
+    """
+    pred = max(float(predicted), 1e-12)
+    meas = max(float(measured), 1e-12)
+    return max(pred / meas, meas / pred)
+
+
 def record(steps: int, nbytes: float, seconds: float, name: str = ""):
     """One calibration point, in TransportStats' schedule-cost convention."""
     return {
@@ -48,7 +60,7 @@ def validate(records, *, tol: float = 2.0, label: str = "netsim",
     for r in records:
         pred = max(m.predict(r), 1e-12)
         meas = max(r["seconds"], 1e-12)
-        ratio = max(pred / meas, meas / pred)
+        ratio = drift_ratio(pred, meas)
         worst = max(worst, ratio)
         lines.append(
             f"  {r.get('name', '?'):<32} measured={meas * 1e6:9.1f}us "

@@ -68,6 +68,10 @@ class SimReport:
     flit_hops: int            # total flits x hops moved
     byte_hops: float          # total payload bytes x hops moved
     dropped: int = 0          # flits past a full (rank, port) delivery buffer
+    #: per-tick move log, only filled by ``simulate(..., trace=True)``:
+    #: (tick, src, dst, msg index, delivered) per link traversal — the raw
+    #: material repro.obs.export renders into the predicted timeline lanes
+    moves: list = field(default_factory=list)
 
     def occupancy(self, link) -> float:
         """Fraction of ticks the directed ``link`` carried a flit."""
@@ -106,6 +110,7 @@ def simulate(
     R: int | None = None,
     switch_bubble: bool = False,
     out_cap: int | None = None,
+    trace: bool = False,
 ) -> SimReport:
     """Run the schedule to completion and report.
 
@@ -117,6 +122,9 @@ def simulate(
     is dropped on arrival and counted in :attr:`SimReport.dropped`, the
     device router's delivery-overrun semantics (it still counts toward
     message completion so an undersized buffer can't hang the schedule).
+    ``trace=True`` additionally records every link traversal into
+    :attr:`SimReport.moves` (off by default: tuner sweeps replay thousands
+    of schedules and must not pay the log).
     """
     messages = list(messages)
     routes = [_route_of(m, rt) for m in messages]
@@ -163,6 +171,7 @@ def simulate(
     flit_hops = 0
     byte_hops = 0.0
     dropped = 0
+    moves_log: list | None = [] if trace else None
     out_fill: dict = {}  # (rank, port) -> delivered flits held
 
     total_work = sum(
@@ -262,6 +271,10 @@ def simulate(
             byte_hops += messages[fl.msg].flit_bytes
             fl.leg += 1
             route = fl.route
+            if moves_log is not None:
+                moves_log.append(
+                    (t, edge[0], edge[1], fl.msg, fl.leg == len(route) - 1)
+                )
             # delivery is by path position, not rank value: route-expanded
             # logical chains may revisit a rank before terminating there
             if fl.leg == len(route) - 1:
@@ -291,6 +304,7 @@ def simulate(
         flit_hops=flit_hops,
         byte_hops=byte_hops,
         dropped=dropped,
+        moves=moves_log if moves_log is not None else [],
     )
 
 

@@ -23,6 +23,7 @@ from __future__ import annotations
 import json
 from dataclasses import dataclass, field
 
+from ..obs import trace as obs
 from .model import LinkModel
 from .schedule import (
     HALO_DIRECTIONS,
@@ -330,6 +331,10 @@ def autotune(
             table.entries[(op, size)] = {
                 **plan.to_dict(), "score": s, "static_score": default_score,
             }
+            if obs.TRACING:
+                obs.emit("tuner.plan", tag=op, nbytes=int(size),
+                         topology=topo.name, score=s,
+                         static_score=default_score, **plan.to_dict())
     return table
 
 

@@ -64,12 +64,25 @@ class TransportStats:
     def record(self, seconds: float, name: str = "") -> dict:
         """One netsim calibration point: this schedule's trace-time cost
         paired with its measured wall time (consumed by
-        :mod:`repro.netsim.calibrate`)."""
+        :mod:`repro.netsim.calibrate`; the model fit reads only
+        steps/bytes/seconds).  ``by_tag`` and ``overflow`` ride along so
+        saved calibration runs stay auditable per message tag — overflow
+        is ``None`` when the counter holds a traced value from a dead
+        jit trace (only a concrete runtime sum is recordable)."""
+        try:
+            ovf = None if self.overflow is None else int(self.overflow)
+        except Exception:  # a traced counter outside its trace
+            ovf = None
         return {
             "steps": int(self.steps),
             "bytes": float(self.bytes_moved),
             "seconds": float(seconds),
             "name": name,
+            "overflow": ovf,
+            "by_tag": {
+                tag: {"steps": int(e["steps"]), "bytes": int(e["bytes"])}
+                for tag, e in self.by_tag.items()
+            },
         }
 
 

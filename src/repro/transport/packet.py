@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..obs import trace as obs
 from .base import Transport, tree_bytes
 from .registry import register_transport
 
@@ -221,6 +222,12 @@ class PacketTransport(Transport):
         # the loss counter so the tests' "overflow == 0" oracle catches it.
         shortfall = jnp.where(is_recv, K - out_cnt[0], 0).astype(jnp.int32)
         self.stats.add_overflow(ovf + shortfall)
+        if obs.TRACING:
+            # the counter itself is a traced runtime value; the event marks
+            # where it accrues and carries the static schedule bounds
+            obs.emit("router.overflow", tag=self._tag, n_steps=int(n_steps),
+                     packets=int(K), transit_cap=int(transit_cap),
+                     counter="stats.overflow")
 
         got = out_pay[0].reshape(K * E)[:T]
         keeps = jnp.asarray(keep_arr)[r]

@@ -61,6 +61,26 @@ def test_watchdog_ema_update(monkeypatch):
     assert wd.ema == pytest.approx(3.0)
 
 
+def test_watchdog_lap_before_start(monkeypatch):
+    """lap() before start() must not seed the EMA with a zero interval.
+
+    Regression: the first lap used to compute dt against an unset timer,
+    seeding ema=0.0 — after which *every* subsequent step exceeded
+    threshold*ema and was flagged a straggler."""
+    now = [100.0]
+    monkeypatch.setattr("repro.ft.watchdog.time.monotonic", lambda: now[0])
+    wd = StepWatchdog(threshold=3.0, alpha=0.1)
+    flags = []
+    for i in range(5):  # note: no start() call
+        now[0] += 1.0
+        flags.append(wd.lap(step=i))
+    assert flags == [False] * 5
+    assert wd.events == []
+    # the un-started first lap arms the timer; the ema seeds from the
+    # first *real* interval, not from dt=0
+    assert wd.ema == pytest.approx(1.0)
+
+
 # ---------------------------------------------------------------------------
 # run_with_restarts
 # ---------------------------------------------------------------------------
