@@ -36,6 +36,7 @@ SUITES = [
     "gesummv",          # Fig 13
     "stencil_bench",    # Fig 15 / Fig 16
     "resources",        # Tab 1 / Tab 2
+    "train_bench",      # channel-native train step (DESIGN.md §12)
 ]
 
 

@@ -1,0 +1,85 @@
+"""Train-step benchmark: the channel-native model stack end to end.
+
+One smoke-scale training step (fwd + bwd + FSDP grad sync) per transport
+backend on the 2x4 data-x-model mesh, measured as compiled wall time and
+modelled from :func:`repro.netsim.predict_train_step_stats` — the same
+per-tag step/byte prediction ``launch/train --validate-comm`` gates
+byte-exactly against the traced channel ledger.
+
+Rows:
+
+* ``train_step,<backend>`` — measured us/step plus the aggregate model
+  comm time (``v5e_model_us``): every tagged channel's logical steps
+  costed at the LinkModel wire-aware hop time.  Deterministic — any
+  schedule regression (more steps, more bytes, a tag gone missing) moves
+  it regardless of runner speed.
+* ``train_comm,<backend>,<tag>`` — the per-tag model cost, so the
+  regression gate pins down *which* channel's schedule changed.
+"""
+
+import time
+
+import jax
+
+from repro.configs import get_arch, smoke
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import TrainSettings, build_train
+from repro.netsim import predict_train_step_stats
+
+from .common import V5E_MODEL, csv_row
+
+BACKENDS = ["static", "packet", "fused", "compressed"]
+MESH = (2, 4)
+SEQ_LEN, GLOBAL_BATCH = 64, 4
+
+
+def _wire_of(backend: str) -> str:
+    return "int8" if backend.startswith("compressed") else "raw"
+
+
+def tag_model_us(entry: dict, wire: str) -> float:
+    """LinkModel cost of one tag's schedule: its logical steps serialized
+    at the wire-aware hop time of the mean per-step payload."""
+    steps = entry["steps"]
+    if steps <= 0:
+        return 0.0
+    return steps * V5E_MODEL.hop_time_wire(entry["bytes"] / steps, wire) * 1e6
+
+
+def run():
+    cfg = smoke(get_arch("yi-6b"))
+    shape = ShapeConfig("bench", seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH,
+                        kind="train")
+    mesh = make_mesh(MESH, ("data", "model"))
+    out = []
+    for backend in BACKENDS:
+        st = TrainSettings(comm_mode=f"smi:{backend}", remat="nothing",
+                           loss_chunks=1, total_steps=10, warmup_steps=1)
+        art = build_train(cfg, mesh, shape, st)
+        state = art["init_state"](0)
+        rng = jax.random.PRNGKey(1)
+        tok = jax.random.randint(
+            rng, (GLOBAL_BATCH, SEQ_LEN), 0, cfg.vocab_size)
+        batch = {"tokens": tok, "labels": tok}
+
+        state, _ = jax.block_until_ready(art["step"](state, batch))  # compile
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            state, _ = jax.block_until_ready(art["step"](state, batch))
+            ts.append(time.perf_counter() - t0)
+        t = sorted(ts)[1]
+
+        predicted = predict_train_step_stats(cfg, MESH, shape, st)
+        wire = _wire_of(backend)
+        model_total = 0.0
+        for tag in sorted(predicted):
+            us = tag_model_us(predicted[tag], wire)
+            model_total += us
+            csv_row(f"train_comm,{backend},{tag}", us,
+                    f"v5e_model_us={us:.1f}")
+        csv_row(f"train_step,{backend}", t * 1e6,
+                f"v5e_model_us={model_total:.1f}")
+        out.append((backend, t, model_total))
+    return out

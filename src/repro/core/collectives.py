@@ -473,7 +473,23 @@ def _stream_scatter_impl(x: jax.Array, comm: Communicator, *, root: int = 0, tra
 # the call's config and streams the whole message through it — the channel's
 # transfer() lowers back onto the _stream_*_impl schedule above, so results
 # and stats are bit-identical to the pre-channel code on every backend.
+#
+# DEPRECATED since PR 8: model/optimizer code routes through the tagged
+# layer API in repro/parallel (which drives the same _stream_*_impl
+# schedules through per-layer ChannelSpecs); these shims stay for direct
+# collective callers and the shim-equivalence tests, but warn.
 # ---------------------------------------------------------------------------
+
+
+def _deprecated_shim(name: str, alt: str):
+    warnings.warn(
+        f"{name} is a deprecated transient-channel shim: untagged, untuned "
+        f"comm invisible to the per-tag step accounting.  Use {alt} (see "
+        "repro/parallel, DESIGN.md §12), or open a tagged channel via "
+        "repro.channels.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def stream_bcast(
@@ -488,6 +504,7 @@ def stream_bcast(
     :func:`_stream_bcast_impl` for the schedule.  Thin shim: opens a
     transient broadcast channel (``repro.channels.open_bcast_channel``)
     and transfers through it."""
+    _deprecated_shim("stream_bcast", "a tagged bcast channel")
     from ..channels import open_bcast_channel
 
     return open_bcast_channel(
@@ -507,6 +524,7 @@ def stream_reduce(
     """Pipelined chain reduction to ``root`` (paper §4.4); see
     :func:`_stream_reduce_impl` for the schedule.  Thin shim over a
     transient reduce channel."""
+    _deprecated_shim("stream_reduce", "a tagged reduce channel")
     from ..channels import open_reduce_channel
 
     return open_reduce_channel(
@@ -520,6 +538,7 @@ def stream_gather(x: jax.Array, comm: Communicator, *, root: int = 0,
     """Convoy gather (root-link bandwidth optimal); see
     :func:`_stream_gather_impl`.  Thin shim over a transient gather
     channel."""
+    _deprecated_shim("stream_gather", "repro.parallel.gather_sequence")
     from ..channels import open_gather_channel
 
     return open_gather_channel(
@@ -532,6 +551,7 @@ def stream_scatter(x: jax.Array, comm: Communicator, *, root: int = 0,
     """Convoy scatter (root injects farthest-first); see
     :func:`_stream_scatter_impl`.  Thin shim over a transient scatter
     channel."""
+    _deprecated_shim("stream_scatter", "repro.parallel.reduce_scatter_sequence")
     from ..channels import open_scatter_channel
 
     return open_scatter_channel(
@@ -552,6 +572,10 @@ def stream_allreduce(
     the schedule and the lossy-wire rules.  Thin shim over a transient
     all-reduce channel; the deprecated ``quantize=``/``dequantize=``
     kwargs forward to the schedule's codec shim unchanged."""
+    _deprecated_shim(
+        "stream_allreduce",
+        "repro.parallel.all_reduce / repro.parallel.grad_allreduce",
+    )
     from ..channels import open_allreduce_channel
 
     return open_allreduce_channel(

@@ -81,6 +81,47 @@ def train_loop(
     return state, history
 
 
+def validate_comm(cfg, mesh, dims, shape, settings: TrainSettings) -> int:
+    """Predicted-vs-measured channel traffic gate (DESIGN.md §12).
+
+    Traces one training step (abstract lowering — no device compute),
+    captures every tagged channel's ledger tallies, and diffs them against
+    :func:`repro.netsim.predict_train_step_stats` per tag.  The contract is
+    byte-exact: any per-tag difference in steps or bytes is a failure."""
+    from ..netsim import predict_train_step_stats
+    from ..parallel import ledger
+
+    dp = int(np.prod(dims[:-1]))
+    tp = dims[-1]
+    art = build_train(cfg, mesh, shape, settings)
+    batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in art["input_specs"].items()}
+    with ledger.capture() as led:
+        art["step"].lower(art["state_shape"], batch)
+    measured = {t: dict(e) for t, e in led.by_tag.items()}
+    predicted = predict_train_step_stats(cfg, (dp, tp), shape, settings)
+
+    mesh_s = ",".join(str(d) for d in dims)
+    print(f"[validate-comm] arch={cfg.name} mesh={mesh_s} "
+          f"comm={settings.comm_mode}")
+    print(f"  {'tag':<16} {'pred bytes':>12} {'meas bytes':>12} "
+          f"{'pred steps':>11} {'meas steps':>11}")
+    failures = 0
+    for tag in sorted(set(predicted) | set(measured)):
+        p = predicted.get(tag, {"steps": 0, "bytes": 0})
+        m = measured.get(tag, {"steps": 0, "bytes": 0})
+        ok = p == m
+        failures += 0 if ok else 1
+        print(f"  {tag:<16} {p['bytes']:>12} {m['bytes']:>12} "
+              f"{p['steps']:>11} {m['steps']:>11}  {'ok' if ok else 'FAIL'}")
+    if failures:
+        print(f"[validate-comm] FAIL: {failures} tag(s) diverge")
+        return 1
+    print(f"[validate-comm] ok: {len(measured)} tags byte-exact "
+          f"({sum(e['bytes'] for e in measured.values())} bytes/step)")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -97,6 +138,9 @@ def main(argv=None):
     ap.add_argument("--compressed-grads", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--validate-comm", action="store_true",
+                    help="trace one step and gate the per-tag channel "
+                         "ledger against netsim's prediction, byte-exact")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -114,6 +158,8 @@ def main(argv=None):
         total_steps=max(args.steps, 10),
         warmup_steps=max(args.steps // 10, 1),
     )
+    if args.validate_comm:
+        return validate_comm(cfg, mesh, dims, shape, st)
     t0 = time.time()
     _, history = train_loop(
         cfg, mesh, shape, st, steps=args.steps, ckpt_dir=args.ckpt_dir

@@ -33,12 +33,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core import Communicator
-from ..core.collectives import stream_allreduce
-from ..core.overlap import (
-    stream_allgather_matmul,
-    stream_matmul_reducescatter,
-    stream_ring_attention,
-)
 from ..transport import resolve_comm_mode
 
 
@@ -120,104 +114,84 @@ def _mm(ctx: ParallelCtx):
 
 
 # ------------------------------------------------------------------ basics
+#
+# These wrappers are kept as the mesh-level vocabulary model code built on
+# PRs 1-5 used; each now delegates to the channel-native layer in
+# repro/parallel (fresh tagged transport per call, ledger-accounted).  New
+# call sites should import repro.parallel directly and pick a layer tag.
 
 
-def psum_model(x, ctx: ParallelCtx):
-    if ctx.tp == 1:
-        return x
-    return lax.psum(x, ctx.model_axis)
+def psum_model(x, ctx: ParallelCtx, *, tag: str = "tp.psum"):
+    from ..parallel import psum_tagged
+
+    return psum_tagged(x, ctx, tag)
 
 
-def psum_max_model(x, ctx: ParallelCtx):
-    if ctx.tp == 1:
-        return x
-    return lax.pmax(x, ctx.model_axis)
+def psum_max_model(x, ctx: ParallelCtx, *, tag: str = "tp.psum"):
+    from ..parallel import pmax_tagged
+
+    return pmax_tagged(x, ctx, tag)
 
 
-def allreduce_model(x, ctx: ParallelCtx):
+def allreduce_model(x, ctx: ParallelCtx, *, tag: str = "tp.allreduce"):
     """Full all-reduce over the model axis (MoE combine, bulk decode)."""
-    if ctx.tp == 1:
-        return x
-    if ctx.is_smi:
-        return stream_allreduce(x, ctx.model_comm)
-    return lax.psum(x, ctx.model_axis)
+    from ..parallel import all_reduce
+
+    return all_reduce(x, ctx, tag=tag)
 
 
 # ----------------------------------------------------- fused linear comms
 
 
-def colparallel_matmul(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
+def colparallel_matmul(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx,
+                       *, tag: str = "tp.col"):
     """y = AG_seq(x) @ w_colshard.  x2d: (t_local, K) sequence-sharded rows;
     w: (K, N_local).  Returns (t_local * tp, N_local): full rows, local cols."""
-    if ctx.tp == 1:
-        return _mm(ctx)(x2d, w)
-    if ctx.is_smi:
-        return stream_allgather_matmul(x2d, w, ctx.model_comm, matmul=_mm(ctx))
-    xf = lax.all_gather(x2d, ctx.model_axis, axis=0, tiled=True)
-    return _mm(ctx)(xf, w)
+    from ..parallel import column_parallel_linear
+
+    return column_parallel_linear(x2d, w, ctx, tag=tag)
 
 
-def colparallel_matmul_gathered(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
+def colparallel_matmul_gathered(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx,
+                                *, tag: str = "tp.col"):
     """Like colparallel_matmul but ALSO returns the gathered input (free on
     the smi ring — every shard transits each device; one lax.all_gather in
     bulk mode).  Enables the shared-gather block layout: later projections
     of the same input become ring-free local GEMMs."""
-    if ctx.tp == 1:
-        return _mm(ctx)(x2d, w), x2d
-    if ctx.is_smi:
-        return stream_allgather_matmul(
-            x2d, w, ctx.model_comm, matmul=_mm(ctx), return_gathered=True
-        )
-    xf = lax.all_gather(x2d, ctx.model_axis, axis=0, tiled=True)
-    return _mm(ctx)(xf, w), xf
+    from ..parallel import column_parallel_linear
+
+    return column_parallel_linear(x2d, w, ctx, tag=tag, return_gathered=True)
 
 
-def rowparallel_matmul(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx):
+def rowparallel_matmul(x2d: jax.Array, w: jax.Array, ctx: ParallelCtx,
+                       *, tag: str = "tp.row"):
     """y = RS_seq(x @ w_rowshard).  x2d: (t_full, K_local) full rows, local
     contraction; w: (K_local, N).  Returns (t_full / tp, N): seq-sharded."""
-    if ctx.tp == 1:
-        return _mm(ctx)(x2d, w)
-    if ctx.is_smi:
-        return stream_matmul_reducescatter(x2d, w, ctx.model_comm, matmul=_mm(ctx))
-    y = _mm(ctx)(x2d, w)
-    return lax.psum_scatter(y, ctx.model_axis, scatter_dimension=0, tiled=True)
+    from ..parallel import row_parallel_linear
+
+    return row_parallel_linear(x2d, w, ctx, tag=tag)
 
 
-def allgather_seq(x, ctx: ParallelCtx, axis: int = 0):
+def allgather_seq(x, ctx: ParallelCtx, axis: int = 0, *,
+                  tag: str = "tp.gather"):
     """Plain sequence all-gather (for non-GEMM consumers, e.g. conv)."""
-    if ctx.tp == 1:
-        return x
-    if ctx.is_smi:
-        from ..core.collectives import stream_allgather
+    from ..parallel import gather_sequence
 
-        if axis != 0:
-            x = jnp.moveaxis(x, axis, 0)
-        g = stream_allgather(x, ctx.model_comm)
-        if axis != 0:
-            g = jnp.moveaxis(g, 0, axis)
-        return g
-    return lax.all_gather(x, ctx.model_axis, axis=axis, tiled=True)
+    return gather_sequence(x, ctx, axis, tag=tag)
 
 
-def reduce_scatter_seq(x, ctx: ParallelCtx, axis: int = 0):
-    if ctx.tp == 1:
-        return x
-    if ctx.is_smi:
-        from ..core.collectives import stream_reduce_scatter
+def reduce_scatter_seq(x, ctx: ParallelCtx, axis: int = 0, *,
+                       tag: str = "tp.scatter"):
+    from ..parallel import reduce_scatter_sequence
 
-        if axis != 0:
-            x = jnp.moveaxis(x, axis, 0)
-        y = stream_reduce_scatter(x, ctx.model_comm)
-        if axis != 0:
-            y = jnp.moveaxis(y, 0, axis)
-        return y
-    return lax.psum_scatter(x, ctx.model_axis, scatter_dimension=axis, tiled=True)
+    return reduce_scatter_sequence(x, ctx, axis, tag=tag)
 
 
 def ring_attention(q, k, v, ctx: ParallelCtx, **kw):
     """Sequence-parallel attention (prefill hillclimb path)."""
-    assert ctx.tp > 1 and ctx.is_smi
-    return stream_ring_attention(q, k, v, ctx.model_comm, **kw)
+    from ..parallel import ring_attention as _ring
+
+    return _ring(q, k, v, ctx, **kw)
 
 
 # ----------------------------------------------------------- grad sync (DP)
@@ -231,14 +205,18 @@ def _compressed_key(ctx: ParallelCtx) -> str:
     return t if t.partition(":")[0] == "compressed" else f"compressed:{t}"
 
 
-def grad_sync(grads, ctx: ParallelCtx, *, compressed: bool = False):
+def grad_sync(grads, ctx: ParallelCtx, *, compressed: bool = False,
+              tag: str = "grad", transport=None):
     """Data-parallel gradient mean over the batch axes.
 
-    smi mode: streamed ring all-reduce per tensor; ``compressed=True``
-    runs each ring over the int8 compressed-link transport (blockwise
-    scales + per-hop error feedback inside the reduce-scatter; end-to-end
-    residual feedback stays with the optimizer's
-    :class:`~repro.optim.grad.ErrorFeedback`).  bulk mode: lax.psum.
+    smi mode: streamed ring all-reduce per tensor, each over a tagged
+    ``"grad"`` channel so metrics/trace can attribute gradient traffic;
+    ``compressed=True`` selects the int8 wire — the channel composes the
+    compressed-link transport (blockwise scales + per-hop error feedback
+    inside the reduce-scatter; end-to-end residual feedback stays with
+    the optimizer's :class:`~repro.optim.grad.ErrorFeedback`).  Channels
+    resolve fresh per tensor: error-feedback residuals must not bleed
+    between tensors of one sync.  bulk mode: lax.psum.
     """
     if not ctx.batch_axes:
         return grads
@@ -248,19 +226,15 @@ def grad_sync(grads, ctx: ParallelCtx, *, compressed: bool = False):
         for a in ctx.batch_axes:
             n *= sizes[a]
     if ctx.is_smi:
-        comm = _dp_comm(ctx)
-        if compressed:
-            from ..transport import get_transport
+        from ..parallel import grad_allreduce
 
-            key = _compressed_key(ctx)
-            # fresh instance per tensor: error-feedback residuals must not
-            # bleed between tensors of one sync
-            return jax.tree.map(
-                lambda g: stream_allreduce(
-                    g, comm, transport=get_transport(key)) / n,
-                grads,
-            )
-        return jax.tree.map(lambda g: stream_allreduce(g, comm) / n, grads)
+        comm = _dp_comm(ctx)
+        wire = "int8" if compressed else "raw"
+        return jax.tree.map(
+            lambda g: grad_allreduce(
+                g, comm, tag=tag, wire=wire, transport=transport) / n,
+            grads,
+        )
     return jax.tree.map(lambda g: lax.pmean(g, ctx.batch_axes), grads)
 
 
@@ -319,23 +293,22 @@ def fsdp_storage_specs(param_specs, fsdp_plan, batch_axes):
     )
 
 
-def fsdp_gather(params, fsdp_plan, ctx: ParallelCtx):
+def fsdp_gather(params, fsdp_plan, ctx: ParallelCtx, *,
+                tag: str = "fsdp.gather"):
     """All-gather FSDP-sharded leaves over the batch axes (inside shard_map).
     AD transposes this to the reduce-scatter gradient sync — ZeRO-3 dataflow
-    for free.  smi mode uses the streamed ring."""
+    for free.  smi mode streams each leaf's ring over a tagged channel."""
     if not ctx.batch_axes:
         return params
+    comm = _dp_comm(ctx) if ctx.is_smi else None
 
     def one(p, dim):
         if dim < 0:
             return p
         if ctx.is_smi:
-            from ..core.collectives import stream_allgather
+            from ..parallel import fsdp_allgather
 
-            comm = _dp_comm(ctx)
-            moved = jnp.moveaxis(p, dim, 0)
-            g = stream_allgather(moved, comm)
-            return jnp.moveaxis(g, 0, dim)
+            return fsdp_allgather(p, comm, dim, tag=tag)
         return lax.all_gather(p, ctx.batch_axes, axis=dim, tiled=True)
 
     return jax.tree.map(one, params, fsdp_plan)
@@ -349,9 +322,11 @@ def _dp_comm(ctx: ParallelCtx) -> Communicator:
     )
 
 
-def grad_sync_fsdp(grads, fsdp_plan, ctx: ParallelCtx, *, compressed=False):
+def grad_sync_fsdp(grads, fsdp_plan, ctx: ParallelCtx, *, compressed=False,
+                   tag: str = "grad"):
     """DP gradient mean: FSDP leaves arrive already reduce-scattered (the
-    gather transpose), so they only need /dp; replicated leaves psum."""
+    gather transpose), so they only need /dp; replicated leaves ring over a
+    tagged ``"grad"`` channel (int8 wire when ``compressed``)."""
     if not ctx.batch_axes:
         return grads
     sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
@@ -359,17 +334,15 @@ def grad_sync_fsdp(grads, fsdp_plan, ctx: ParallelCtx, *, compressed=False):
     for a in ctx.batch_axes:
         dp *= sizes[a]
     comm = _dp_comm(ctx) if ctx.is_smi else None
-    tkey = _compressed_key(ctx) if compressed else None
+    wire = "int8" if compressed else "raw"
 
     def one(g, dim):
         if dim >= 0:
             return g / dp
         if ctx.is_smi:
-            from ..core.collectives import stream_allreduce
-            from ..transport import get_transport
+            from ..parallel import grad_allreduce
 
-            t = get_transport(tkey) if tkey is not None else None
-            return stream_allreduce(g, comm, transport=t) / dp
+            return grad_allreduce(g, comm, tag=tag, wire=wire) / dp
         return lax.pmean(g, ctx.batch_axes)
 
     return jax.tree.map(one, grads, fsdp_plan)

@@ -22,13 +22,14 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels import flash_attention
-from ..mesh.api import (
-    ParallelCtx,
-    allgather_seq,
-    colparallel_matmul,
-    colparallel_matmul_gathered,
-    psum_model,
-    rowparallel_matmul,
+from ..mesh.api import ParallelCtx
+from ..parallel import (
+    column_parallel_linear,
+    gather_sequence,
+    pmax_tagged,
+    psum_tagged,
+    ring_attention,
+    row_parallel_linear,
 )
 from .common import rms_norm, rope, trunc_normal
 
@@ -114,10 +115,11 @@ def apply_attention_ring(p, x, cfg, ctx: ParallelCtx):
 
     # gather the head-sharded weights (small) over the model ring
     if tp > 1:
-        wq = allgather_seq(jnp.moveaxis(p["wq"], 1, 0), ctx, axis=0)
+        wq = gather_sequence(jnp.moveaxis(p["wq"], 1, 0), ctx, tag="tp.attn.qkv")
         wq = jnp.moveaxis(wq, 0, 1)                  # (D, Hp*hd)
-        wo = allgather_seq(p["wo"], ctx, axis=0)     # (Hp*hd, D)
-        bq = allgather_seq(p["bq"], ctx, axis=0) if cfg.qkv_bias else None
+        wo = gather_sequence(p["wo"], ctx, tag="tp.attn.out")  # (Hp*hd, D)
+        bq = (gather_sequence(p["bq"], ctx, tag="tp.attn.qkv")
+              if cfg.qkv_bias else None)
     else:
         wq, wo = p["wq"], p["wo"]
         bq = p.get("bq")
@@ -141,10 +143,8 @@ def apply_attention_ring(p, x, cfg, ctx: ParallelCtx):
     k = rope(k, pos, cfg.rope_theta)
 
     if tp > 1:
-        from ..core.overlap import stream_ring_attention
-
-        o = stream_ring_attention(
-            q, k, v, ctx.model_comm, causal=True,
+        o = ring_attention(
+            q, k, v, ctx, tag="tp.attn.ring", causal=True,
             local_window=cfg.local_window,
         )                                             # (B, S_loc, Hp, hd)
     else:
@@ -175,10 +175,14 @@ def apply_attention(p, x, cfg, ctx: ParallelCtx, *, use_kernel_interpret=False):
     # column-parallel Q (head-sharded); replicated KV
     if ctx.opt_shared_gather:
         # one ring: Q overlapped with the gather; KV from the free copy
-        q, xf = colparallel_matmul_gathered(x2d, p["wq"], ctx)
+        q, xf = column_parallel_linear(
+            x2d, p["wq"], ctx, tag="tp.attn.qkv", return_gathered=True
+        )
     else:
-        q = colparallel_matmul(x2d, p["wq"], ctx)     # (tp*B*S_loc, H_loc*hd)
-        xf = allgather_seq(x2d, ctx) if tp > 1 else x2d
+        q = column_parallel_linear(
+            x2d, p["wq"], ctx, tag="tp.attn.qkv"
+        )                                             # (tp*B*S_loc, H_loc*hd)
+        xf = gather_sequence(x2d, ctx, tag="tp.attn.kv") if tp > 1 else x2d
     k = xf @ p["wk"]
     v = xf @ p["wv"]
     if cfg.qkv_bias:
@@ -220,7 +224,7 @@ def apply_attention(p, x, cfg, ctx: ParallelCtx, *, use_kernel_interpret=False):
         .transpose(1, 0, 2, 3, 4)
         .reshape(tp * B * S_loc, H_loc * hd)
     )
-    y = rowparallel_matmul(o2d, p["wo"], ctx)          # (B*S_loc, D)
+    y = row_parallel_linear(o2d, p["wo"], ctx, tag="tp.attn.out")  # (B*S_loc, D)
     return y.reshape(B, S_loc, D)
 
 
@@ -281,7 +285,8 @@ def decode_attention(p, x, cache, pos, cfg, ctx: ParallelCtx):
 
     # gather all query heads (tiny) so every device scans its cache slice
     if tp > 1:
-        q = allgather_seq(q_loc.reshape(B, H_loc * hd)[None], ctx, axis=0)
+        q = gather_sequence(q_loc.reshape(B, H_loc * hd)[None], ctx,
+                            tag="tp.attn.qkv")
         q = q.reshape(tp, B, H_loc, hd).transpose(1, 0, 2, 3).reshape(B, Hp, hd)
     else:
         q = q_loc.reshape(B, Hp, hd)
@@ -318,22 +323,20 @@ def decode_attention(p, x, cache, pos, cfg, ctx: ParallelCtx):
         valid = jnp.logical_and(valid, slot_pos > pos - cfg.local_window)
     s = jnp.where(valid[None, None, :], s, -1e30)
     m_loc = s.max(axis=-1)                                   # (B, Hp)
-    from ..mesh.api import psum_max_model
-
-    m_g = psum_max_model(m_loc, ctx)
+    m_g = pmax_tagged(m_loc, ctx, "tp.attn.out")
     pexp = jnp.exp(s - m_g[..., None])
     pexp = jnp.where(valid[None, None, :], pexp, 0.0)
     l_loc = pexp.sum(axis=-1)
     o_loc = jnp.einsum("bhk,bkhd->bhd", pexp, kv_sel_v.astype(jnp.float32))
-    l_g = psum_model(l_loc, ctx)
-    o_g = psum_model(o_loc, ctx)
+    l_g = psum_tagged(l_loc, ctx, "tp.attn.out")
+    o_g = psum_tagged(o_loc, ctx, "tp.attn.out")
     o = o_g / jnp.maximum(l_g, 1e-30)[..., None]             # (B, Hp, hd)
     o = o * mask_full(cfg, Hp)[None, :, None].astype(o.dtype)
 
     # row-parallel out proj: my head slice only, then psum
     o_my = lax.dynamic_slice_in_dim(o, r * H_loc, H_loc, axis=1)
     y = (o_my.reshape(B, H_loc * hd).astype(x.dtype)) @ p["wo"]
-    y = psum_model(y, ctx)
+    y = psum_tagged(y, ctx, "tp.attn.out")
     cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
     return y.reshape(B, 1, -1), cache
 

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..mesh.api import ParallelCtx, psum_model, psum_max_model
+from ..mesh.api import ParallelCtx
+from ..parallel import parallel_embedding, vocab_parallel_cross_entropy
 
 
 def trunc_normal(key, shape, scale, dtype=jnp.float32):
@@ -41,39 +42,16 @@ def silu(x):
 
 
 def embed_lookup(table_local, ids, ctx: ParallelCtx):
-    """Vocab-parallel embedding: table (V_local, D), ids any int shape.
-
-    Every device holds vocab rows [r*V_local, (r+1)*V_local); out-of-shard
-    ids hit zero and the psum over the model axis assembles the embedding."""
-    V_local, D = table_local.shape
-    r = ctx.rank()
-    local = ids - r * V_local
-    ok = jnp.logical_and(local >= 0, local < V_local)
-    emb = jnp.take(table_local, jnp.clip(local, 0, V_local - 1), axis=0)
-    emb = jnp.where(ok[..., None], emb, 0)
-    return psum_model(emb, ctx)
+    """Vocab-parallel embedding: table (V_local, D), ids any int shape —
+    the ``"tp.embed"`` channel (repro/parallel) assembles the shards."""
+    return parallel_embedding(table_local, ids, ctx)
 
 
 def vocab_parallel_ce(logits_local, labels, ctx: ParallelCtx):
-    """Cross entropy with vocab-sharded logits (B, S, V_local), labels (B, S).
-
-    max / sum-exp / label-pick each psum once over the model axis — the
-    standard Megatron scheme, with SMI/bulk selection at the psum level."""
-    V_local = logits_local.shape[-1]
-    r = ctx.rank()
-    lf = logits_local.astype(jnp.float32)
-    # the max shift is gradient-neutral (d(logZ+m)/dm = 0); pmax has no JVP,
-    # so stop the gradient at its *input* (symbolic-zero tangents skip it)
-    m = psum_max_model(lax.stop_gradient(lf.max(axis=-1)), ctx)  # (B, S)
-    z = psum_model(jnp.exp(lf - m[..., None]).sum(axis=-1), ctx)  # (B, S)
-    local = labels - r * V_local
-    ok = jnp.logical_and(local >= 0, local < V_local)
-    picked = jnp.take_along_axis(
-        lf, jnp.clip(local, 0, V_local - 1)[..., None], axis=-1
-    )[..., 0]
-    picked = psum_model(jnp.where(ok, picked, 0.0), ctx)
-    ce = jnp.log(z) + m - picked
-    return ce  # (B, S)
+    """Cross entropy with vocab-sharded logits (B, S, V_local), labels
+    (B, S) — the Megatron scheme over the ``"tp.loss.ce"`` channel
+    (repro/parallel)."""
+    return vocab_parallel_cross_entropy(logits_local, labels, ctx)
 
 
 def lm_head(x, table_local, ctx: ParallelCtx):

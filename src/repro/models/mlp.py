@@ -7,12 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..mesh.api import (
-    ParallelCtx,
-    colparallel_matmul,
-    colparallel_matmul_gathered,
-    rowparallel_matmul,
-)
+from ..mesh.api import ParallelCtx
+from ..parallel import column_parallel_linear, row_parallel_linear
 from .common import silu, trunc_normal
 
 
@@ -49,22 +45,24 @@ def apply_mlp(p, x, cfg, ctx: ParallelCtx):
     x2d = x.reshape(B * S_loc, D)
     if cfg.mlp_type == "swiglu":
         if ctx.opt_shared_gather:
-            g, xf = colparallel_matmul_gathered(x2d, p["w_gate"], ctx)
+            g, xf = column_parallel_linear(
+                x2d, p["w_gate"], ctx, tag="tp.mlp.up", return_gathered=True
+            )
             u = xf @ p["w_up"]          # ring-free: reuse the gathered input
         else:
-            g = colparallel_matmul(x2d, p["w_gate"], ctx)
-            u = colparallel_matmul(x2d, p["w_up"], ctx)
+            g = column_parallel_linear(x2d, p["w_gate"], ctx, tag="tp.mlp.up")
+            u = column_parallel_linear(x2d, p["w_up"], ctx, tag="tp.mlp.up")
         h = silu(g) * u
     else:
-        u = colparallel_matmul(x2d, p["w_up"], ctx)
+        u = column_parallel_linear(x2d, p["w_up"], ctx, tag="tp.mlp.up")
         h = jax.nn.gelu(u)
-    y = rowparallel_matmul(h, p["w_down"], ctx)
+    y = row_parallel_linear(h, p["w_down"], ctx, tag="tp.mlp.down")
     return y.reshape(B, S_loc, D)
 
 
 def apply_mlp_replicated(p, x, cfg, ctx: ParallelCtx):
     """Decode path: x (B, 1, D) replicated; partial-sum via psum."""
-    from ..mesh.api import allreduce_model
+    from ..parallel import all_reduce
 
     B = x.shape[0]
     x2d = x.reshape(B, -1)
@@ -72,5 +70,5 @@ def apply_mlp_replicated(p, x, cfg, ctx: ParallelCtx):
         h = silu(x2d @ p["w_gate"]) * (x2d @ p["w_up"])
     else:
         h = jax.nn.gelu(x2d @ p["w_up"])
-    y = allreduce_model(h @ p["w_down"], ctx)
+    y = all_reduce(h @ p["w_down"], ctx, tag="tp.mlp.down")
     return y.reshape(B, 1, -1)

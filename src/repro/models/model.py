@@ -19,13 +19,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..mesh.api import (
-    ParallelCtx,
-    allgather_seq,
-    psum_model,
-    reduce_scatter_seq,
+from ..mesh.api import ParallelCtx
+from ..parallel import (
+    gather_sequence,
+    parallel_embedding_partial,
+    psum_tagged,
+    reduce_scatter_sequence,
+    vocab_parallel_cross_entropy,
 )
-from .common import lm_head, rms_norm, trunc_normal, vocab_parallel_ce
+from .common import lm_head, rms_norm, trunc_normal
 from .transformer import (
     apply_stack,
     decode_stack,
@@ -85,12 +87,7 @@ def _cast(p, dtype):
 def _embed_partial(table_local, ids, ctx: ParallelCtx):
     """Local-vocab-shard partial embedding, NO reduction (caller picks
     psum for decode or reduce-scatter for the SP residual stream)."""
-    V_loc, D = table_local.shape
-    r = ctx.rank()
-    local = ids - r * V_loc
-    ok = jnp.logical_and(local >= 0, local < V_loc)
-    emb = jnp.take(table_local, jnp.clip(local, 0, V_loc - 1), axis=0)
-    return jnp.where(ok[..., None], emb, 0)
+    return parallel_embedding_partial(table_local, ids, ctx)
 
 
 def embed_tokens_sp(params, tokens, cfg, ctx: ParallelCtx, extra_embeds=None):
@@ -124,7 +121,7 @@ def embed_tokens_sp(params, tokens, cfg, ctx: ParallelCtx, extra_embeds=None):
             emb.reshape(B, tp, S_loc, -1).transpose(1, 0, 2, 3)
             .reshape(tp * B * S_loc, -1)
         )
-        out = reduce_scatter_seq(blocks, ctx)
+        out = reduce_scatter_sequence(blocks, ctx, tag="tp.embed")
         return out.reshape(B, S_loc, -1).astype(_dt(cfg))
     return emb.astype(_dt(cfg))
 
@@ -182,7 +179,8 @@ def lm_loss(
     def chunk_ce(xc, labc):
         """xc: (B, csz, D) shard chunk; labc: (B, tp*csz[, n_cb]) aligned."""
         if tp > 1:
-            xg = allgather_seq(xc.reshape(B * csz, D), ctx)
+            xg = gather_sequence(xc.reshape(B * csz, D), ctx,
+                                 tag="tp.loss.gather")
             xg = xg.reshape(tp, B, csz, D).transpose(1, 0, 2, 3).reshape(B, tp * csz, D)
         else:
             xg = xc
@@ -192,7 +190,7 @@ def lm_loss(
             logits = jnp.einsum("bsd,dv->bsv", xg, table).astype(jnp.float32)
             lab = labc[..., cb] if cfg.n_codebooks > 1 else labc
             valid = lab >= 0
-            ce = vocab_parallel_ce(logits, jnp.maximum(lab, 0), ctx)
+            ce = vocab_parallel_cross_entropy(logits, jnp.maximum(lab, 0), ctx)
             t = t + jnp.sum(jnp.where(valid, ce, 0.0))
             c = c + jnp.sum(valid.astype(jnp.float32))
         return t, c
@@ -263,7 +261,7 @@ def lm_decode_step(params, caches, token, pos, cfg, ctx: ParallelCtx,
         )
     else:
         emb = _embed_partial(pf["embed"], token, ctx)
-    x = psum_model(emb, ctx)[:, None, :].astype(_dt(cfg))  # (B, 1, D)
+    x = psum_tagged(emb, ctx, "tp.embed")[:, None, :].astype(_dt(cfg))  # (B, 1, D)
     x, caches = decode_stack(pf["stack"], caches, x, pos, cfg, ctx,
                              fsdp_plan=None if fsdp_plan is None else fsdp_plan["stack"])
     x = rms_norm(x, pf["final_norm"], cfg.norm_eps)[:, 0]   # (B, D)
@@ -279,7 +277,8 @@ def lm_decode_step(params, caches, token, pos, cfg, ctx: ParallelCtx,
     if not gather_logits:
         return logit_loc.astype(jnp.float32), caches
     # gather the vocab shards: (V_loc, ...) -> (V, ...)
-    logits = allgather_seq(jnp.moveaxis(logit_loc, 1, 0), ctx, axis=0)
+    logits = gather_sequence(jnp.moveaxis(logit_loc, 1, 0), ctx,
+                             tag="tp.loss.gather")
     logits = jnp.moveaxis(logits, 0, 1)                     # (B, V[, n_cb])
     return logits.astype(jnp.float32), caches
 

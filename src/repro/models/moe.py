@@ -26,11 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..mesh.api import (
-    ParallelCtx,
-    allgather_seq,
-    reduce_scatter_seq,
-)
+from ..mesh.api import ParallelCtx
+from ..parallel import moe_combine, moe_dispatch
 from .common import silu, trunc_normal
 
 
@@ -138,10 +135,10 @@ def apply_moe(p, x, cfg, ctx: ParallelCtx):
     B, S_loc, D = x.shape
     tp = ctx.tp
     x2d = x.reshape(B * S_loc, D)
-    xf = allgather_seq(x2d, ctx) if tp > 1 else x2d        # (T, D)
+    xf = moe_dispatch(x2d, ctx) if tp > 1 else x2d         # (T, D)
     y_part, aux = _dispatch_compute(p, xf, cfg, ctx)
     # merge expert-group partials AND return to sequence shards in one RS
-    y = reduce_scatter_seq(y_part, ctx) if tp > 1 else y_part
+    y = moe_combine(y_part, ctx) if tp > 1 else y_part
     y = y.reshape(B, S_loc, D)
     if cfg.shared_expert:
         from .mlp import apply_mlp
@@ -152,11 +149,11 @@ def apply_moe(p, x, cfg, ctx: ParallelCtx):
 
 def apply_moe_replicated(p, x, cfg, ctx: ParallelCtx):
     """Decode: x (B, 1, D) replicated -> same (+aux)."""
-    from ..mesh.api import allreduce_model
+    from ..parallel import all_reduce
 
     B, _, D = x.shape
     y_part, aux = _dispatch_compute(p, x.reshape(B, D), cfg, ctx)
-    y = allreduce_model(y_part, ctx).reshape(B, 1, D)
+    y = all_reduce(y_part, ctx, tag="ep.combine").reshape(B, 1, D)
     if cfg.shared_expert:
         from .mlp import apply_mlp_replicated
 

@@ -14,13 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..mesh.api import (
-    ParallelCtx,
-    allgather_seq,
-    allreduce_model,
-    colparallel_matmul,
-    rowparallel_matmul,
-)
+from ..mesh.api import ParallelCtx
+from ..parallel import all_reduce, column_parallel_linear, row_parallel_linear
 from .common import silu, trunc_normal
 from .ssm import _causal_conv
 
@@ -84,13 +79,13 @@ def apply_rglru(p, x, cfg, ctx: ParallelCtx):
 
     x2d = x.reshape(B * S_loc, D)
     if ctx.opt_shared_gather:
-        from ..mesh.api import colparallel_matmul_gathered
-
-        br, xf = colparallel_matmul_gathered(x2d, p["w_branch"], ctx)
+        br, xf = column_parallel_linear(
+            x2d, p["w_branch"], ctx, tag="ssm.in", return_gathered=True
+        )
         gt = xf @ p["w_gate"]           # ring-free
     else:
-        br = colparallel_matmul(x2d, p["w_branch"], ctx)
-        gt = colparallel_matmul(x2d, p["w_gate"], ctx)
+        br = column_parallel_linear(x2d, p["w_branch"], ctx, tag="ssm.in")
+        gt = column_parallel_linear(x2d, p["w_gate"], ctx, tag="ssm.in")
 
     def to_bsc(t):
         return t.reshape(tp, B, S_loc, W_loc).transpose(1, 0, 2, 3).reshape(B, S, W_loc)
@@ -111,7 +106,7 @@ def apply_rglru(p, x, cfg, ctx: ParallelCtx):
     y2d = (
         y.reshape(B, tp, S_loc, W_loc).transpose(1, 0, 2, 3).reshape(tp * B * S_loc, W_loc)
     )
-    out = rowparallel_matmul(y2d, p["w_out"], ctx)
+    out = row_parallel_linear(y2d, p["w_out"], ctx, tag="ssm.out")
     return out.reshape(B, S_loc, D)
 
 
@@ -145,5 +140,5 @@ def decode_rglru(p, x, cache, cfg, ctx: ParallelCtx):
     a, b = _gates(p, u.astype(jnp.float32))
     h = a * cache["h"] + b
     y = h.astype(x.dtype) * jax.nn.gelu(gt)
-    out = allreduce_model(y @ p["w_out"], ctx)
+    out = all_reduce(y @ p["w_out"], ctx, tag="ssm.out")
     return out.reshape(B, 1, -1), {"conv": cx[:, 1:], "h": h}

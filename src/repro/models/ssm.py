@@ -17,12 +17,12 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels import ssd_scan, ssd_decode_step
-from ..mesh.api import (
-    ParallelCtx,
-    allgather_seq,
-    allreduce_model,
-    colparallel_matmul,
-    rowparallel_matmul,
+from ..mesh.api import ParallelCtx
+from ..parallel import (
+    all_reduce,
+    column_parallel_linear,
+    gather_sequence,
+    row_parallel_linear,
 )
 from .common import rms_norm, silu, trunc_normal
 
@@ -96,14 +96,16 @@ def apply_ssm(p, x, cfg, ctx: ParallelCtx, *, use_kernel_interpret=False):
     x2d = x.reshape(B * S_loc, D)
     if ctx.opt_shared_gather:
         # one ring for the whole mixer: z overlapped, x/B/C/dt from the copy
-        from ..mesh.api import colparallel_matmul_gathered
-
-        z, xf = colparallel_matmul_gathered(x2d, p["w_z"], ctx)
+        z, xf = column_parallel_linear(
+            x2d, p["w_z"], ctx, tag="ssm.in", return_gathered=True
+        )
         xin = xf @ _loc_cols(p["w_x"], ctx)
     else:
-        z = colparallel_matmul(x2d, p["w_z"], ctx)      # (tp*B*S_loc, d_in_loc)
-        xin = colparallel_matmul(x2d, p["w_x"], ctx)
-        xf = allgather_seq(x2d, ctx) if tp > 1 else x2d
+        z = column_parallel_linear(
+            x2d, p["w_z"], ctx, tag="ssm.in"
+        )                                               # (tp*B*S_loc, d_in_loc)
+        xin = column_parallel_linear(x2d, p["w_x"], ctx, tag="ssm.in")
+        xf = gather_sequence(x2d, ctx, tag="ssm.gather") if tp > 1 else x2d
     bc = xf @ p["w_bc"]                                  # (T, 2*Dst)
     dt_raw = xf @ p["w_dt"]                              # (T, nh_loc)
 
@@ -143,7 +145,7 @@ def apply_ssm(p, x, cfg, ctx: ParallelCtx, *, use_kernel_interpret=False):
         .transpose(1, 0, 2, 3)
         .reshape(tp * B * S_loc, d_in_loc)
     )
-    out = rowparallel_matmul(y2d, p["w_out"], ctx)
+    out = row_parallel_linear(y2d, p["w_out"], ctx, tag="ssm.out")
     return out.reshape(B, S_loc, D)
 
 
@@ -212,6 +214,6 @@ def decode_ssm(p, x, cache, cfg, ctx: ParallelCtx):
     ) * xh
     y = rms_norm(y.reshape(B, nh_loc, 1, hd), p["gn"], cfg.norm_eps)
     y = y.reshape(B, d_in_loc) * silu(z)
-    out = allreduce_model(y @ p["w_out"], ctx)
+    out = all_reduce(y @ p["w_out"], ctx, tag="ssm.out")
     cache = {"conv_x": cx[:, 1:], "conv_bc": cb[:, 1:], "state": state}
     return out.reshape(B, 1, -1), cache

@@ -34,6 +34,7 @@ from .schedule import (
     predict_channel_stats,
     predict_halo_stats,
     predict_halo_time,
+    predict_train_step_stats,
     predict_transport_stats,
     ring_perm_round,
 )
@@ -70,6 +71,7 @@ __all__ = [
     "predict_channel_stats",
     "predict_halo_stats",
     "predict_halo_time",
+    "predict_train_step_stats",
     "predict_transport_stats",
     "ring_perm_round",
     "fit",

@@ -398,6 +398,206 @@ def predict_transport_stats(
     raise ValueError(f"no stats model for transport {transport!r}")
 
 
+# ---------------------------------------------------------------------------
+# whole-training-step prediction (per channel tag)
+# ---------------------------------------------------------------------------
+
+
+def _shift_cost(leaves, key, *, pkt_elems=32, slack_steps=4):
+    """Exact (steps, wire_bytes) ONE ring shift (hop distance 1) of a pytree
+    payload tallies, per backend family.  ``leaves``: [(elems, itemsize,
+    is_float)].  Mirrors the transports' trace accounting: static/fused move
+    the raw bytes in one step; the compressed link re-wires float leaves as
+    int8 + scale sidecar; the packet router's schedule bound is
+    ``hops + n_packets + slack`` over the flattened f32 wire."""
+    from .model import WIRE_AXIS_ELEMS, int8_wire_nbytes
+
+    raw = sum(n * sz for n, sz, _ in leaves)
+    fam, _, inner = key.partition(":")
+    if fam == "compressed":
+        wire = sum(
+            int8_wire_nbytes(n, WIRE_AXIS_ELEMS) if fl else n * sz
+            for n, sz, fl in leaves
+        )
+        if inner == "packet":
+            k = packet_n_packets(-(-wire // 4), pkt_elems)
+            return 1 + k + slack_steps, wire
+        return 1, wire
+    if fam == "packet":
+        k = packet_n_packets(-(-raw // 4), pkt_elems)
+        return 1 + k + slack_steps, raw
+    return 1, raw
+
+
+def predict_train_step_stats(cfg, mesh_shape, shape, settings, *,
+                             pkt_elems=32, slack_steps=4):
+    """Per-tag predicted channel traffic of ONE traced training step —
+    forward + backward + FSDP gather + gradient sync — as the channel
+    ledger (:mod:`repro.parallel.ledger`) measures it.
+
+    ``cfg`` is the arch config, ``mesh_shape`` is ``(dp, tp)``, ``shape``
+    a ShapeConfig (seq_len / global_batch), ``settings`` duck-types
+    TrainSettings (comm_mode, fsdp, loss_chunks, shared_gather, ring_attn,
+    compressed_grads).  Returns ``{tag: {"steps": int, "bytes": int}}``.
+
+    The contract (DESIGN.md §12) is byte-exactness against a traced
+    ``launch/train --validate-comm`` run: the sum of per-tag channel
+    predictions here must equal the ledger's ``tag_bytes()`` to the byte.
+    Counts are therefore *trace* counts — a ``lax.scan`` over layer periods
+    traces its body once, so per-block channels count once per traced
+    period position (the ledger's documented rolled-loop semantics), not
+    once per layer.  AD-transposed collectives mirror their forward
+    channel and are accounted there by both sides."""
+    from ..transport import resolve_comm_mode
+
+    dp, tp = int(mesh_shape[0]), int(mesh_shape[1])
+    base_mode, key = resolve_comm_mode(settings.comm_mode)
+    if base_mode != "smi":
+        raise ValueError(
+            f"predict_train_step_stats models smi comm modes; got "
+            f"{settings.comm_mode!r}"
+        )
+    esz = 2 if cfg.dtype == "bfloat16" else 4
+    B = shape.global_batch // dp
+    S = shape.seq_len
+    S_loc = S // tp if tp > 1 else S
+    rows = B * S_loc
+    D = cfg.d_model
+    shared = bool(getattr(settings, "shared_gather", False))
+
+    acc: dict = {}
+
+    def add(tag, steps, nbytes):
+        e = acc.setdefault(tag, {"steps": 0, "bytes": 0})
+        e["steps"] += int(steps)
+        e["bytes"] += int(nbytes)
+
+    def ring(tag, leaves, P, n_shifts=None, tkey=key):
+        if P <= 1:
+            return
+        ns = (P - 1) if n_shifts is None else n_shifts
+        s, b = _shift_cost(leaves, tkey, pkt_elems=pkt_elems,
+                           slack_steps=slack_steps)
+        add(tag, s * ns, b * ns)
+
+    def psum(tag, nbytes, n=1):
+        if tp > 1:
+            add(tag, n, nbytes * n)
+
+    act = lambda elems: [(int(elems), esz, True)]  # noqa: E731
+
+    # ---- forward activations: embed -> traced block positions -> loss
+    if tp > 1:
+        ring("tp.embed", act(rows * D), tp)
+
+    period = len(cfg.pattern)
+    n_full = cfg.n_layers // period
+    rem = cfg.n_layers % period
+    traced = (list(cfg.pattern) if n_full > 0 else []) + list(cfg.pattern[:rem])
+
+    for kind in traced:
+        if tp <= 1:
+            break
+        if kind in ("attn", "moe"):
+            if getattr(settings, "ring_attn", False):
+                hd = cfg.hd
+                Hp = -(-cfg.n_heads // tp) * tp
+                ring("tp.attn.qkv", act(D * Hp * hd // tp), tp)
+                if cfg.qkv_bias:
+                    ring("tp.attn.qkv", act(Hp * hd // tp), tp)
+                ring("tp.attn.out", act(Hp * hd // tp * D), tp)
+                kv = B * S_loc * cfg.n_kv_heads * hd
+                ring("tp.attn.ring", act(kv) + act(kv), tp)
+            else:
+                ring("tp.attn.qkv", act(rows * D), tp)
+                if not shared:
+                    ring("tp.attn.kv", act(rows * D), tp)
+                ring("tp.attn.out", act(rows * D), tp)
+        if kind == "attn" or (kind == "moe" and cfg.shared_expert):
+            n_up = 1 if (cfg.mlp_type != "swiglu" or shared) else 2
+            ring("tp.mlp.up", act(rows * D), tp, n_shifts=n_up * (tp - 1))
+            ring("tp.mlp.down", act(rows * D), tp)
+        if kind == "moe":
+            ring("ep.dispatch", act(rows * D), tp)
+            ring("ep.combine", act(rows * D), tp)
+        if kind == "ssm":
+            n_in = 1 if shared else 2
+            ring("ssm.in", act(rows * D), tp, n_shifts=n_in * (tp - 1))
+            if not shared:
+                ring("ssm.gather", act(rows * D), tp)
+            ring("ssm.out", act(rows * D), tp)
+        if kind == "rec":
+            n_in = 1 if shared else 2
+            ring("ssm.in", act(rows * D), tp, n_shifts=n_in * (tp - 1))
+            ring("ssm.out", act(rows * D), tp)
+
+    lc = int(getattr(settings, "loss_chunks", 1))
+    csz = S_loc // lc
+    n_tables = cfg.n_codebooks if cfg.n_codebooks > 1 else 1
+    if tp > 1:
+        for _ in range(lc):
+            ring("tp.loss.gather", act(B * csz * D), tp)
+            psum("tp.loss.ce", B * tp * csz * 4, n=3 * n_tables)
+
+    # ---- FSDP param gather + gradient sync over the data ring
+    if getattr(settings, "fsdp", False) and dp > 1:
+        gathered, grad_rings = _fsdp_leaf_walk(cfg, dp, tp, n_full)
+        for loc_elems in gathered:
+            ring("fsdp.gather", act(loc_elems), dp)
+        gkey = key if not getattr(settings, "compressed_grads", False) else (
+            key if key.partition(":")[0] == "compressed"
+            else f"compressed:{key}"
+        )
+        for loc_elems in grad_rings:
+            m = -(-loc_elems // dp)  # padded ring chunk
+            ring("grad", [(m, 4, True)], dp, n_shifts=2 * (dp - 1), tkey=gkey)
+
+    return {t: acc[t] for t in sorted(acc)}
+
+
+def _fsdp_leaf_walk(cfg, dp, tp, n_full):
+    """Local element counts for the FSDP plan's leaves: (gathered, rings).
+
+    ``gathered`` lists, once per traced gather site, the per-shift payload
+    elems of every dim>=0 leaf (model-sharded, /n_full for scan-sliced
+    period leaves, /dp for the FSDP shard).  ``rings`` lists the full local
+    elems of dim<0 leaves, which the gradient sync all-reduces over a
+    tagged ``"grad"`` channel."""
+    import jax
+    import numpy as np
+    from jax.tree_util import tree_flatten_with_path
+
+    from ..core.comm import Communicator
+    from ..mesh.api import ParallelCtx, fsdp_dim_for
+    from ..models.model import init_lm, lm_specs
+
+    comm = (
+        Communicator.create("model", (tp,), name="tp_model")
+        if tp > 1 else None
+    )
+    ctx = ParallelCtx(model_axis="model", batch_axes=("data",),
+                      model_comm=comm, comm_mode="smi")
+    shapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg, ctx))
+    specs = lm_specs(cfg, ctx)
+    sh_leaves, _ = tree_flatten_with_path(shapes)
+    sp_leaves, _ = tree_flatten_with_path(specs)
+
+    gathered, rings = [], []
+    for (path, sh), (_, sp) in zip(sh_leaves, sp_leaves):
+        stacked = any(getattr(k, "key", None) == "periods" for k in path)
+        dim = fsdp_dim_for(sh.shape, sp, dp, skip_dim0=stacked)
+        tp_div = 1
+        for d in tuple(sp):
+            if d is not None:
+                tp_div *= tp
+        loc = int(np.prod(sh.shape)) // tp_div
+        if dim < 0:
+            rings.append(loc)
+        else:
+            gathered.append(loc // (n_full if stacked else 1) // dp)
+    return gathered, rings
+
+
 def predict_channel_stats(spec, *, shape, dtype="float32", n_chunks=None,
                           **kw):
     """Exact (steps, bytes_moved) one whole-message ``transfer`` of

@@ -22,13 +22,24 @@ import jax.numpy as jnp
 
 
 def clip_by_global_norm(grads, max_norm: float):
+    """Scale ``grads`` so their global L2 norm is at most ``max_norm``.
+
+    Each leaf keeps its own dtype (the scale is applied in f32 and cast
+    back — no silent upcast of bf16 grads), and an empty pytree is a
+    no-op with norm 0 rather than a ``jax.tree.reduce`` crash."""
     sq = jax.tree.reduce(
         lambda a, b: a + b,
         jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), grads),
+        jnp.zeros((), jnp.float32),
     )
     norm = jnp.sqrt(sq)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
-    return jax.tree.map(lambda g: g * scale, grads), norm
+    return (
+        jax.tree.map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+        ),
+        norm,
+    )
 
 
 class ErrorFeedback:
@@ -54,10 +65,26 @@ class ErrorFeedback:
         return jax.tree.map(lambda c, s: c - s.astype(jnp.float32), corrected, synced)
 
     @classmethod
-    def sync(cls, ef_state, grads, sync_fn):
-        """One-call hook: correct, sync through ``sync_fn`` (any lossy
-        all-reduce, e.g. a compressed-transport ``grad_sync``), and roll
-        the residual.  Returns ``(synced_grads, new_ef_state)``."""
+    def sync(cls, ef_state, grads, sync_fn=None, *, comm=None, tag="grad",
+             wire="int8"):
+        """One-call hook: correct, sync, and roll the residual.  Returns
+        ``(synced_grads, new_ef_state)``.
+
+        Pass ``sync_fn`` (any lossy all-reduce, e.g. a compressed-transport
+        ``grad_sync``) — or pass ``comm`` and the sync opens a tagged
+        ``"grad"`` channel per tensor itself (int8 wire by default: the
+        compressed-link transport composes under the channel spec, so the
+        per-hop and end-to-end feedback levels stack)."""
+        if sync_fn is None:
+            assert comm is not None, "ErrorFeedback.sync needs sync_fn or comm"
+            from ..parallel import grad_allreduce
+
+            def sync_fn(tree):
+                return jax.tree.map(
+                    lambda g: grad_allreduce(g, comm, tag=tag, wire=wire),
+                    tree,
+                )
+
         corrected = cls.add(ef_state, grads)
         synced = sync_fn(corrected)
         return synced, cls.update(corrected, synced)

@@ -1,0 +1,53 @@
+"""repro.parallel — channel-native parallel layers (DESIGN.md §12).
+
+The model stack's parallelism, expressed as layers that each own a
+:class:`~repro.channels.ChannelSpec`: tensor-parallel linear projections,
+the vocab-parallel embedding and cross-entropy, MoE dispatch/combine, the
+ring-attention KV ring, DP/FSDP gradient channels, and the pipeline stage
+hop — plus the :mod:`~repro.parallel.ledger` that accounts every traced
+wire byte per tag for the ``--validate-comm`` contract.
+"""
+
+from . import ledger
+from .layers import (
+    LAYER_TAGS,
+    all_reduce,
+    column_parallel_linear,
+    fsdp_allgather,
+    gather_sequence,
+    grad_allreduce,
+    layer_spec,
+    moe_combine,
+    moe_dispatch,
+    parallel_embedding,
+    parallel_embedding_partial,
+    pmax_tagged,
+    psum_tagged,
+    reduce_scatter_sequence,
+    ring_attention,
+    row_parallel_linear,
+    stage_transport,
+    vocab_parallel_cross_entropy,
+)
+
+__all__ = [
+    "LAYER_TAGS",
+    "all_reduce",
+    "column_parallel_linear",
+    "fsdp_allgather",
+    "gather_sequence",
+    "grad_allreduce",
+    "layer_spec",
+    "ledger",
+    "moe_combine",
+    "moe_dispatch",
+    "parallel_embedding",
+    "parallel_embedding_partial",
+    "pmax_tagged",
+    "psum_tagged",
+    "reduce_scatter_sequence",
+    "ring_attention",
+    "row_parallel_linear",
+    "stage_transport",
+    "vocab_parallel_cross_entropy",
+]

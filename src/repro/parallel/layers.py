@@ -1,0 +1,400 @@
+"""Channel-native parallel layers: every layer's comm is a tagged SMI
+channel (DESIGN.md §12).
+
+The model stack's communication — column/row-parallel projections, the
+parallel embedding, the vocab-sharded cross-entropy, MoE dispatch/combine,
+the KV ring of ring attention, sequence gathers/scatters — routes through
+here.  Each layer call owns a :class:`~repro.channels.ChannelSpec`
+(:func:`layer_spec`: communicator, transport backend, wire format, stats
+tag, tuning plan) and drives the exact streamed schedule the repo already
+proves bit-identical across backends (core/overlap.py,
+core/collectives.py) through a *fresh* transport resolved from that spec,
+with every wire byte accounted under the spec's tag.
+
+Two properties fall out:
+
+* **bit-identity** — the schedules, the per-call fresh-instance transport
+  resolution, and the raw ``lax.psum`` reductions (kept where the model
+  always used them) are unchanged; only tagging and accounting are added,
+  neither of which touches traced values.
+* **predictability** — the tags partition a training step's wire traffic
+  into the taxonomy ``netsim.predict_train_step_stats`` prices, and a
+  :func:`~repro.parallel.ledger.capture` of a traced step must match it
+  to the byte (``launch/train --validate-comm``).
+
+Tag taxonomy (one bucket per layer comm; see DESIGN.md §12):
+``tp.embed`` ``tp.attn.qkv`` ``tp.attn.kv`` ``tp.attn.out``
+``tp.attn.ring`` ``tp.mlp.up`` ``tp.mlp.down`` ``tp.loss.gather``
+``tp.loss.ce`` ``ep.dispatch`` ``ep.combine`` ``ssm.in`` ``ssm.gather``
+``ssm.out`` ``fsdp.gather`` ``grad`` ``pp.stage``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..channels import ChannelSpec
+from ..channels.channel import _tagged
+from ..core.collectives import (
+    _stream_allreduce_impl,
+    stream_allgather,
+    stream_reduce_scatter,
+)
+from ..core.comm import Communicator
+from ..core.overlap import (
+    stream_allgather_matmul,
+    stream_matmul_reducescatter,
+    stream_ring_attention,
+)
+from ..transport.base import tree_bytes
+from . import ledger
+
+#: the layer tag taxonomy (asserted stable by tests/test_parallel_layers.py)
+LAYER_TAGS = (
+    "tp.embed", "tp.attn.qkv", "tp.attn.kv", "tp.attn.out", "tp.attn.ring",
+    "tp.mlp.up", "tp.mlp.down", "tp.loss.gather", "tp.loss.ce",
+    "ep.dispatch", "ep.combine", "ssm.in", "ssm.gather", "ssm.out",
+    "fsdp.gather", "grad", "pp.stage",
+)
+
+#: channel kind -> the netsim tuner op a ``plan="auto"`` consults (the
+#: tuner prices rooted/ring collectives; ring AG/RS cost like the ring
+#: all-reduce phases they compose into)
+_PLAN_OPS = {"bcast": "bcast", "reduce": "allreduce", "gather": "allreduce",
+             "scatter": "allreduce", "allreduce": "allreduce",
+             "exchange": "allreduce", "p2p": "p2p"}
+
+
+def _matmul(ctx):
+    return ctx.matmul_fn or (
+        lambda a, b: jnp.dot(
+            a, b, preferred_element_type=jnp.float32
+        ).astype(a.dtype)
+    )
+
+
+def layer_spec(ctx, tag: str, *, kind: str = "allreduce", wire: str = "raw",
+               plan=None, transport=None, port: int | None = None,
+               n_chunks: int = 1, op=None) -> ChannelSpec:
+    """The ChannelSpec a parallel layer owns: the context's TP communicator
+    and launch-selected backend, the layer's stats tag, and the call's
+    wire/plan overrides.  ``transport=None`` inherits ``ctx.transport``
+    unless a ``plan`` is given (then the tuned plan picks the backend;
+    pass ``transport`` explicitly to pin it)."""
+    if transport is None and plan is None:
+        transport = ctx.transport
+    return ChannelSpec(
+        comm=ctx.model_comm, kind=kind, tag=tag, wire=wire, plan=plan,
+        transport=transport, port=port, n_chunks=n_chunks, op=op,
+    )
+
+
+def _open(spec: ChannelSpec, x):
+    """Fresh transport realising ``spec`` for one traced layer call,
+    mirrored into the active capture ledger.  A ``plan`` ("auto" or a
+    netsim Plan) selects backend + wire from the tuning table unless the
+    spec pins a transport; an int8-wire plan falls back to the raw wire
+    for non-floating payloads (exactness over the tuner's cost hint)."""
+    if spec.plan is not None and spec.transport is None:
+        from ..netsim.tune import Plan
+
+        p = spec.plan
+        if not isinstance(p, Plan):
+            assert p == "auto", \
+                f"plan must be 'auto', None or a Plan; got {p!r}"
+            p = spec.comm.plan(
+                _PLAN_OPS.get(spec.kind, "allreduce"), tree_bytes(x)
+            )
+        if p.wire != "raw" and not all(
+            jnp.issubdtype(l.dtype, jnp.floating)
+            for l in jax.tree.leaves(x)
+        ):
+            p = dataclasses.replace(p, wire="raw")
+        spec = spec.replace(transport=p.transport_key)
+    return ledger.attach(spec.resolve())
+
+
+# ------------------------------------------------------------ tagged psums
+#
+# Sites the model always reduced with a raw lax.psum/pmax (flash-decode
+# LSE combine, the vocab-parallel CE) keep it — bit-identity — but the
+# wire cost is still a channel's worth of traffic: one logical step moving
+# the reduced pytree, tallied under the layer tag so the step prediction
+# covers every byte the forward trace moves.
+
+
+def psum_tagged(x, ctx, tag: str):
+    if ctx.tp == 1:
+        return x
+    ledger.tally(tag, 1, tree_bytes(x))
+    return lax.psum(x, ctx.model_axis)
+
+
+def pmax_tagged(x, ctx, tag: str):
+    if ctx.tp == 1:
+        return x
+    ledger.tally(tag, 1, tree_bytes(x))
+    return lax.pmax(x, ctx.model_axis)
+
+
+# ------------------------------------------------------- linear projections
+
+
+def column_parallel_linear(x2d, w, ctx, *, tag: str = "tp.col", spec=None,
+                           plan=None, transport=None, wire: str = "raw",
+                           return_gathered: bool = False):
+    """y = AG_seq(x) @ w_colshard through a tagged channel.
+
+    ``x2d``: (t_local, K) sequence-sharded rows; ``w``: (K, N_local).
+    Returns (t_local * tp, N_local) — full rows, local columns — with the
+    all-gather streamed through the per-chunk GEMM (core/overlap.py).
+    ``return_gathered=True`` also returns the gathered input (free on the
+    ring: every shard transits each device)."""
+    mm = _matmul(ctx)
+    if ctx.tp == 1:
+        y = mm(x2d, w)
+        return (y, x2d) if return_gathered else y
+    if not ctx.is_smi:
+        xf = lax.all_gather(x2d, ctx.model_axis, axis=0, tiled=True)
+        y = mm(xf, w)
+        return (y, xf) if return_gathered else y
+    if spec is None:
+        spec = layer_spec(ctx, tag, kind="gather", wire=wire, plan=plan,
+                          transport=transport)
+    t = _open(spec, x2d)
+    with _tagged(t, spec.stats_tag):
+        return stream_allgather_matmul(
+            x2d, w, spec.comm, matmul=mm, transport=t,
+            return_gathered=return_gathered,
+        )
+
+
+def row_parallel_linear(x2d, w, ctx, *, tag: str = "tp.row", spec=None,
+                        plan=None, transport=None, wire: str = "raw"):
+    """y = RS_seq(x @ w_rowshard) through a tagged channel.
+
+    ``x2d``: (t_full, K_local) full rows, local contraction; ``w``:
+    (K_local, N).  Returns (t_full / tp, N) sequence shards, with the
+    reduce-scatter streamed through the per-chunk GEMM."""
+    mm = _matmul(ctx)
+    if ctx.tp == 1:
+        return mm(x2d, w)
+    if not ctx.is_smi:
+        y = mm(x2d, w)
+        return lax.psum_scatter(y, ctx.model_axis, scatter_dimension=0,
+                                tiled=True)
+    if spec is None:
+        spec = layer_spec(ctx, tag, kind="reduce", wire=wire, plan=plan,
+                          transport=transport)
+    t = _open(spec, x2d)
+    with _tagged(t, spec.stats_tag):
+        return stream_matmul_reducescatter(
+            x2d, w, spec.comm, matmul=mm, transport=t
+        )
+
+
+# --------------------------------------------------- sequence redistributes
+
+
+def gather_sequence(x, ctx, axis: int = 0, *, tag: str = "tp.gather",
+                    spec=None, plan=None, transport=None, wire: str = "raw"):
+    """Plain sequence all-gather along ``axis`` through a tagged channel
+    (non-GEMM consumers: MoE token dispatch, conv/scan inputs, decode
+    logit assembly)."""
+    if ctx.tp == 1:
+        return x
+    if not ctx.is_smi:
+        return lax.all_gather(x, ctx.model_axis, axis=axis, tiled=True)
+    if spec is None:
+        spec = layer_spec(ctx, tag, kind="gather", wire=wire, plan=plan,
+                          transport=transport)
+    t = _open(spec, x)
+    with _tagged(t, spec.stats_tag):
+        if axis != 0:
+            x = jnp.moveaxis(x, axis, 0)
+        g = stream_allgather(x, spec.comm, transport=t)
+        if axis != 0:
+            g = jnp.moveaxis(g, 0, axis)
+        return g
+
+
+def reduce_scatter_sequence(x, ctx, axis: int = 0, *, tag: str = "tp.scatter",
+                            spec=None, plan=None, transport=None,
+                            wire: str = "raw"):
+    """Sequence reduce-scatter along ``axis`` through a tagged channel
+    (MoE combine, the embedding's fused vocab-psum + seq-scatter)."""
+    if ctx.tp == 1:
+        return x
+    if not ctx.is_smi:
+        return lax.psum_scatter(x, ctx.model_axis, scatter_dimension=axis,
+                                tiled=True)
+    if spec is None:
+        spec = layer_spec(ctx, tag, kind="reduce", wire=wire, plan=plan,
+                          transport=transport)
+    t = _open(spec, x)
+    with _tagged(t, spec.stats_tag):
+        if axis != 0:
+            x = jnp.moveaxis(x, axis, 0)
+        y = stream_reduce_scatter(x, spec.comm, transport=t)
+        if axis != 0:
+            y = jnp.moveaxis(y, 0, axis)
+        return y
+
+
+def all_reduce(x, ctx, *, tag: str = "tp.allreduce", spec=None, plan=None,
+               transport=None, wire: str = "raw"):
+    """Full all-reduce over the model axis through a tagged channel (MoE
+    decode combine, replicated-MLP decode)."""
+    if ctx.tp == 1:
+        return x
+    if not ctx.is_smi:
+        return lax.psum(x, ctx.model_axis)
+    if spec is None:
+        spec = layer_spec(ctx, tag, kind="allreduce", wire=wire, plan=plan,
+                          transport=transport)
+    t = _open(spec, x)
+    with _tagged(t, spec.stats_tag):
+        return _stream_allreduce_impl(x, spec.comm, transport=t)
+
+
+# -------------------------------------------------------- embedding / loss
+
+
+def parallel_embedding(table_local, ids, ctx, *, tag: str = "tp.embed"):
+    """Vocab-parallel embedding lookup -> replicated (B, ..., D).
+
+    Every device holds vocab rows [r*V_local, (r+1)*V_local); out-of-shard
+    ids hit zero and one tagged psum over the model axis assembles the
+    embedding.  (The SP residual stream instead keeps the partial and
+    fuses the reduction into :func:`reduce_scatter_sequence` — see
+    models/model.py ``embed_tokens_sp``.)"""
+    emb = parallel_embedding_partial(table_local, ids, ctx)
+    return psum_tagged(emb, ctx, tag)
+
+
+def parallel_embedding_partial(table_local, ids, ctx):
+    """This vocab shard's partial embedding, NO reduction (caller picks
+    the tagged psum for decode or the reduce-scatter for SP)."""
+    V_local = table_local.shape[0]
+    r = ctx.rank()
+    local = ids - r * V_local
+    ok = jnp.logical_and(local >= 0, local < V_local)
+    emb = jnp.take(table_local, jnp.clip(local, 0, V_local - 1), axis=0)
+    return jnp.where(ok[..., None], emb, 0)
+
+
+def vocab_parallel_cross_entropy(logits_local, labels, ctx,
+                                 *, tag: str = "tp.loss.ce"):
+    """Cross entropy with vocab-sharded logits (B, S, V_local), labels
+    (B, S).  max / sum-exp / label-pick each cross the model axis once —
+    the standard Megatron scheme — as tagged reductions."""
+    V_local = logits_local.shape[-1]
+    r = ctx.rank()
+    lf = logits_local.astype(jnp.float32)
+    # the max shift is gradient-neutral (d(logZ+m)/dm = 0); pmax has no
+    # JVP, so stop the gradient at its *input*
+    m = pmax_tagged(lax.stop_gradient(lf.max(axis=-1)), ctx, tag)  # (B, S)
+    z = psum_tagged(jnp.exp(lf - m[..., None]).sum(axis=-1), ctx, tag)
+    local = labels - r * V_local
+    ok = jnp.logical_and(local >= 0, local < V_local)
+    picked = jnp.take_along_axis(
+        lf, jnp.clip(local, 0, V_local - 1)[..., None], axis=-1
+    )[..., 0]
+    picked = psum_tagged(jnp.where(ok, picked, 0.0), ctx, tag)
+    return jnp.log(z) + m - picked  # (B, S)
+
+
+# --------------------------------------------------------------- attention
+
+
+def ring_attention(q, k, v, ctx, *, tag: str = "tp.attn.ring", spec=None,
+                   plan=None, transport=None, **kw):
+    """Sequence-parallel ring attention: the (small, GQA) K/V blocks
+    stream around a tagged channel ring while every device computes its
+    sequence shard's attention (core/overlap.py)."""
+    assert ctx.tp > 1 and ctx.is_smi
+    if spec is None:
+        spec = layer_spec(ctx, tag, kind="exchange", plan=plan,
+                          transport=transport)
+    t = _open(spec, (k, v))
+    with _tagged(t, spec.stats_tag):
+        return stream_ring_attention(q, k, v, spec.comm, transport=t, **kw)
+
+
+# --------------------------------------------------------------------- MoE
+
+
+def moe_dispatch(x2d, ctx, *, tag: str = "ep.dispatch", **kw):
+    """Expert dispatch: gather the sequence-sharded token stream to the
+    full token view every expert group routes over (the EP all-gather)."""
+    return gather_sequence(x2d, ctx, tag=tag, **kw)
+
+
+def moe_combine(y_partial, ctx, *, tag: str = "ep.combine", **kw):
+    """Expert combine: merge per-expert-group partials AND return to
+    sequence shards in one reduce-scatter (the EP combine collective)."""
+    return reduce_scatter_sequence(y_partial, ctx, tag=tag, **kw)
+
+
+# ----------------------------------------------------- gradient sync (DP)
+
+
+def grad_allreduce(g, comm: Communicator, *, tag: str = "grad",
+                   transport=None, wire: str = "raw"):
+    """One tensor's DP ring all-reduce over a tagged ``"grad"`` channel.
+
+    ``wire="int8"`` composes the compressed-link transport (blockwise
+    scales + per-hop error feedback) exactly like a tuned plan would.
+    Resolution is fresh per call — per-tensor error-feedback residuals
+    must not bleed between tensors of one sync — unless a live transport
+    instance is passed (callers tracking stats across a sync own that
+    trade)."""
+    spec = ChannelSpec(comm=comm, kind="allreduce", tag=tag, wire=wire,
+                       transport=transport, port=None)
+    t = _open(spec, g)
+    with _tagged(t, spec.stats_tag):
+        return _stream_allreduce_impl(g, comm, transport=t)
+
+
+def fsdp_allgather(p, comm: Communicator, dim: int, *,
+                   tag: str = "fsdp.gather", transport=None):
+    """All-gather one FSDP-sharded leaf along ``dim`` over a tagged
+    channel (AD transposes it to the reduce-scatter gradient sync)."""
+    spec = ChannelSpec(comm=comm, kind="gather", tag=tag,
+                       transport=transport, port=None)
+    t = _open(spec, p)
+    with _tagged(t, spec.stats_tag):
+        moved = jnp.moveaxis(p, dim, 0)
+        g = stream_allgather(moved, spec.comm, transport=t)
+        return jnp.moveaxis(g, 0, dim)
+
+
+# ------------------------------------------------------------ pipeline hop
+
+
+def stage_transport(comm: Communicator, *, tag: str = "pp.stage",
+                    transport=None):
+    """The persistent chain channel's transport for a pipeline schedule:
+    resolved once per traced schedule (the paper's open-once channel), to
+    be driven once per tick inside the scan body.
+
+    Runtime-stats backends (the packet router) must not run inside
+    ``lax.scan`` bodies, and a lossy wire would corrupt the activations a
+    stage hop must deliver exactly — both fall back to the static
+    schedule-equivalent wire, which moves bit-identical values (the
+    transport contract).  Returns ``(spec, transport)``; the caller
+    tallies the schedule's full step count via
+    :func:`repro.parallel.ledger.tally` (a scan body traces once, so
+    per-call accounting would undercount)."""
+    spec = ChannelSpec(comm=comm, kind="exchange", tag=tag,
+                       transport=transport, port=None)
+    t = spec.resolve()
+    if getattr(t, "runtime_stats", False) or getattr(t, "lossy_wire", False):
+        from ..transport.registry import get_transport
+
+        t = get_transport("static")
+    return spec, t

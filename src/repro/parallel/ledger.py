@@ -1,0 +1,118 @@
+"""CommLedger: whole-step, per-tag trace-time comm accounting.
+
+The parallel layers (repro/parallel/layers.py) resolve a *fresh* transport
+instance per call — per-trace stats, packet-reuse guards, compressed
+error-feedback freshness all depend on it — which means no single
+``TransportStats`` object survives a traced training step.  The ledger is
+the aggregation point that does survive: while a :func:`capture` block is
+active, every transport the layers open mirrors its trace-time tallies
+(steps, bytes, honouring the active message tag) into one process-level
+:class:`CommLedger`, and sites that communicate without a transport at all
+(the raw ``lax.psum`` reductions kept for bit-identity) tally into it
+directly.
+
+``launch/train --validate-comm`` lowers the jitted train step inside a
+capture and asserts the ledger's per-tag bytes equal
+``netsim.predict_train_step_stats`` to the byte (DESIGN.md §12).
+
+Mirroring hooks the :meth:`~repro.transport.base.Transport.tally` funnel
+(the single accounting entry point shared by every backend, including the
+packet router's explicit step-count formula).  Traced *runtime* counters —
+the packet overflow sum — deliberately stay per-instance: they are keyed
+to their jax trace and aggregating them across scan-body and top-level
+traces would leak tracers.  The rolled ``_schedule_loop`` path in
+core/collectives.py scales stats post-hoc without re-entering ``tally``;
+it only drives the rooted chain collectives (bcast/reduce), which are not
+on the training-step path — callers capturing those should unroll or
+account explicitly.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+from ..transport.base import Transport
+
+#: the ledger (if any) currently mirroring transport tallies
+_ACTIVE: "CommLedger | None" = None
+
+#: bucket for tallies arriving outside any message tag
+UNTAGGED = "untagged"
+
+
+@dataclass
+class CommLedger:
+    """Per-tag (steps, bytes) totals across one traced step."""
+
+    steps: int = 0
+    bytes_moved: int = 0
+    #: tag -> {"steps": int, "bytes": int}
+    by_tag: dict = field(default_factory=dict)
+    _attached: set = field(default_factory=set, repr=False)
+
+    def tally(self, tag: str | None, steps: int, nbytes: int):
+        self.steps += steps
+        self.bytes_moved += nbytes
+        e = self.by_tag.setdefault(tag or UNTAGGED, {"steps": 0, "bytes": 0})
+        e["steps"] += steps
+        e["bytes"] += nbytes
+
+    def tag_counts(self, tag: str) -> tuple[int, int]:
+        e = self.by_tag.get(tag, {"steps": 0, "bytes": 0})
+        return e["steps"], e["bytes"]
+
+    def tag_bytes(self) -> dict:
+        """{tag: bytes} — the quantity the validate-comm gate compares."""
+        return {tag: e["bytes"] for tag, e in sorted(self.by_tag.items())}
+
+    def attach(self, t: Transport) -> Transport:
+        """Mirror every future ``tally`` of ``t`` (and its ``inner`` chain)
+        into this ledger, each under the transport's tag active at tally
+        time.  Idempotent per instance; returns ``t`` for chaining."""
+        x = t
+        while isinstance(x, Transport):
+            if id(x) not in self._attached:
+                self._attached.add(id(x))
+                orig = x.tally  # bound method (class funnel)
+
+                def mirrored(steps, nbytes, _x=x, _orig=orig):
+                    _orig(steps, nbytes)
+                    self.tally(_x._tag, steps, nbytes)
+
+                x.tally = mirrored
+            x = getattr(x, "inner", None)
+        return t
+
+
+def active() -> CommLedger | None:
+    return _ACTIVE
+
+
+def attach(t: Transport) -> Transport:
+    """Attach ``t`` to the active ledger (no-op outside a capture)."""
+    if _ACTIVE is not None:
+        _ACTIVE.attach(t)
+    return t
+
+
+def tally(tag: str | None, steps: int, nbytes: int):
+    """Direct tally for transport-less comm sites (the raw psum
+    reductions); no-op outside a capture."""
+    if _ACTIVE is not None:
+        _ACTIVE.tally(tag, steps, nbytes)
+
+
+@contextmanager
+def capture():
+    """Activate a fresh ledger for the block; trace the step inside it
+    (``jit(...).lower(...)`` runs the Python accounting) and read the
+    per-tag totals off the yielded :class:`CommLedger`."""
+    global _ACTIVE
+    prev = _ACTIVE
+    led = CommLedger()
+    _ACTIVE = led
+    try:
+        yield led
+    finally:
+        _ACTIVE = prev
