@@ -37,6 +37,7 @@ SUITES = [
     "stencil_bench",    # Fig 15 / Fig 16
     "resources",        # Tab 1 / Tab 2
     "train_bench",      # channel-native train step (DESIGN.md §12)
+    "serving_bench",    # continuous vs wave batching + serve.* channels
 ]
 
 

@@ -1,0 +1,172 @@
+"""Serving benchmark: continuous batching vs wave batching + channel model.
+
+Two sections:
+
+* **Arrival-rate sweep** — the same fixed-seed Poisson request trace is
+  replayed against the wave engine (admission only at wave boundaries)
+  and the continuous engine (admission into any free slot), single
+  device.  Latency is measured in decode *ticks* (finish tick - arrival
+  tick), which is deterministic: p50/p99 and total ticks-to-drain move
+  only when the scheduling itself changes.  The suite asserts the
+  continuous engine beats the wave engine on total ticks (tokens/tick,
+  hence tokens/s at fixed step time) AND p99 latency at every rate —
+  the PR's acceptance gate, enforced on every bench run.
+* **Tensor-parallel decode step** — one continuous decode step per
+  transport backend on the 1x8 ring (the paper's 8-endpoint testbed),
+  measured as compiled wall time plus the per-tag ``serve.*`` model
+  columns from :func:`repro.netsim.predict_decode_step_stats` — the same
+  per-tag step/byte prediction ``launch/serve --validate-comm`` gates
+  byte-exactly against the traced channel ledger.  ``serve.migrate``
+  is pinned to the static schedule on a raw wire whatever the layer
+  backend (the slot image is reinterpreted bytes).
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, smoke
+
+from .common import V5E_MODEL, csv_row, wire_of
+
+BACKENDS = ["static", "packet", "fused", "compressed"]
+MESH = (1, 8)
+SLOTS, CAPACITY = 4, 64
+N_REQUESTS, MAX_NEW = 12, 6
+RATES = [1.0, 0.5, 0.25]  # requests per decode tick (Poisson)
+
+
+def tag_model_us(entry: dict, wire: str) -> float:
+    steps = entry["steps"]
+    if steps <= 0:
+        return 0.0
+    return steps * V5E_MODEL.hop_time_wire(entry["bytes"] / steps, wire) * 1e6
+
+
+def _trace(cfg, rate, seed=0):
+    """Fixed-seed Poisson arrival trace: [(tick, Request)]."""
+    from repro.serving import Request
+
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    out = []
+    for uid in range(N_REQUESTS):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.randint(3, 9))
+        prompt = rng.randint(0, cfg.vocab_size, (plen,)).tolist()
+        out.append((int(t), Request(uid=uid, prompt=prompt, max_new=MAX_NEW)))
+    return out
+
+
+def _drain(eng, arrivals):
+    """Run the trace to completion; returns (stats, wall_s)."""
+    t0 = time.perf_counter()
+    done = eng.run(max_steps=4096, arrivals=[(t, r) for t, r in arrivals])
+    wall = time.perf_counter() - t0
+    assert len(done) == len(arrivals), "trace did not drain"
+    lat = np.array(sorted(
+        eng.finish_step[r.uid] - t for t, r in arrivals
+    ))
+    toks = sum(len(r.out) for r in done)
+    ticks = max(eng.finish_step.values())
+    return {
+        "ticks": ticks, "toks": toks,
+        "p50": float(np.percentile(lat, 50)),
+        "p99": float(np.percentile(lat, 99)),
+    }, wall
+
+
+def _sweep():
+    from repro.mesh.api import ParallelCtx
+    from repro.models import init_lm
+    from repro.serving import ContinuousEngine, ServeEngine
+
+    cfg = smoke(get_arch("yi-6b"))
+    ctx = ParallelCtx()
+    params = init_lm(jax.random.PRNGKey(0), cfg, ctx)
+    for rate in RATES:
+        arrivals = _trace(cfg, rate)
+        stats = {}
+        for name, cls in [("wave", ServeEngine),
+                          ("continuous", ContinuousEngine)]:
+            eng = cls(cfg, params, ctx=ctx, batch_slots=SLOTS,
+                      capacity=CAPACITY)
+            s, wall = _drain(eng, [(t, _copy_req(r)) for t, r in arrivals])
+            stats[name] = s
+            csv_row(
+                f"serve_sweep,{name},rate={rate}",
+                wall * 1e6 / s["toks"],
+                f"ticks={s['ticks']};p50_ticks={s['p50']:.0f};"
+                f"p99_ticks={s['p99']:.0f};toks={s['toks']}",
+            )
+        w, c = stats["wave"], stats["continuous"]
+        assert c["ticks"] < w["ticks"], (
+            f"rate={rate}: continuous must beat wave on ticks-to-drain "
+            f"(tokens/s): {c['ticks']} vs {w['ticks']}"
+        )
+        assert c["p99"] < w["p99"], (
+            f"rate={rate}: continuous must beat wave on p99 latency: "
+            f"{c['p99']} vs {w['p99']}"
+        )
+
+
+def _copy_req(r):
+    from repro.serving import Request
+
+    return Request(uid=r.uid, prompt=list(r.prompt), max_new=r.max_new)
+
+
+def _tp_step():
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import build_continuous_serve
+    from repro.models import init_lm
+    from repro.netsim import predict_decode_step_stats
+
+    class St:
+        def __init__(self, mode):
+            self.comm_mode = mode
+
+    cfg = smoke(get_arch("glm4-9b"))
+    mesh = make_mesh(MESH, ("data", "model"))
+    B = SLOTS
+    for backend in BACKENDS:
+        mode = f"smi:{backend}"
+        rt = build_continuous_serve(cfg, mesh, comm_mode=mode,
+                                    batch_slots=B, capacity=CAPACITY)
+        params = init_lm(jax.random.PRNGKey(0), cfg, rt["ctx"])
+        params = jax.device_put(params, rt["param_sharding"])
+        caches = rt["init_caches"]()
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+
+        _, caches = jax.block_until_ready(
+            rt["step"](params, caches, tok, pos))  # compile
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out, caches = jax.block_until_ready(
+                rt["step"](params, caches, tok, pos))
+            ts.append(time.perf_counter() - t0)
+        t = sorted(ts)[1]
+        if rt["pool"] is not None:
+            rt["pool"].close()
+
+        predicted = predict_decode_step_stats(
+            cfg, MESH, B, St(mode), capacity=CAPACITY, migrations=1)
+        wire = wire_of(backend)
+        model_total = 0.0
+        for tag in sorted(predicted):
+            # migration is static/raw-pinned regardless of the backend
+            us = tag_model_us(predicted[tag],
+                              "raw" if tag == "serve.migrate" else wire)
+            model_total += us
+            csv_row(f"serve_comm,{backend},{tag}", us,
+                    f"v5e_model_us={us:.1f}")
+        csv_row(f"serve_step,{backend}", t * 1e6,
+                f"v5e_model_us={model_total:.1f}")
+
+
+def run():
+    _sweep()
+    _tp_step()

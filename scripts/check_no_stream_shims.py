@@ -1,0 +1,57 @@
+"""CI lint guard: no deprecated ``stream_*`` collective shims under src/.
+
+The ``stream_bcast`` / ``stream_reduce`` / ``stream_gather`` /
+``stream_scatter`` / ``stream_allreduce`` wrappers are deprecated since
+PR 8 — the channels API (``repro.channels.open_*_channel`` and
+``ChannelSpec``) is the supported surface — and are slated for removal
+once external callers migrate (PR 9 bumped the warnings).  This guard
+fails CI when any *new* in-tree use appears under ``src/`` outside the
+shims' definition site, so the deprecation can only ever move forward.
+
+    python scripts/check_no_stream_shims.py [ROOT]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+SHIMS = ("stream_bcast", "stream_reduce", "stream_gather",
+         "stream_scatter", "stream_allreduce")
+PAT = re.compile(r"\b(" + "|".join(SHIMS) + r")\b")
+
+#: the only files allowed to mention the shims: their definition site
+#: and the package re-export that keeps them importable until removal
+ALLOWED = {
+    pathlib.PurePosixPath("src/repro/core/collectives.py"),
+    pathlib.PurePosixPath("src/repro/core/__init__.py"),
+}
+
+
+def main(argv=None) -> int:
+    root = pathlib.Path(argv[0]) if argv else pathlib.Path(
+        __file__).resolve().parent.parent
+    hits = []
+    for path in sorted((root / "src").rglob("*.py")):
+        rel = pathlib.PurePosixPath(path.relative_to(root).as_posix())
+        if rel in ALLOWED:
+            continue
+        for lineno, line in enumerate(
+                path.read_text().splitlines(), start=1):
+            m = PAT.search(line)
+            if m:
+                hits.append(f"{rel}:{lineno}: {line.strip()}")
+    if hits:
+        print("[no-stream-shims] deprecated stream_* shim use under src/ "
+              "(use the channels API — repro.channels.open_*_channel):")
+        for h in hits:
+            print(f"  {h}")
+        return 1
+    print("[no-stream-shims] ok: no stream_* shim references under src/ "
+          f"outside {sorted(str(p) for p in ALLOWED)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -22,6 +22,10 @@ API for the TPU rendering:
 * :data:`PORTS` — the default :class:`~repro.core.comm.PortAllocator`
   every ``open_*`` claims its port from; channels are context managers
   and release the port on close/scope exit;
+* :class:`ChannelPool` — the *persistent* lifecycle
+  (``ChannelSpec(persistent=True)``): one strongly-held port claim per
+  layer tag that survives trace exits and is released only on explicit
+  close / engine shutdown — the serving engine's channel context;
 * :func:`default_channel_spec` — ``comm_mode="smi:<backend>"`` strings
   mapped onto their channel spec.
 
@@ -47,12 +51,14 @@ from .collective import (
     open_reduce_channel,
     open_scatter_channel,
 )
+from .persistent import ChannelPool
 
 __all__ = [
     "KINDS",
     "ChannelSpec",
     "default_channel_spec",
     "PORTS",
+    "ChannelPool",
     "Channel",
     "channel_transfer",
     "open_channel",

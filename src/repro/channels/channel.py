@@ -48,12 +48,14 @@ def _tagged(t, tag: str | None):
 
 def _claim(spec: ChannelSpec, allocator) -> ChannelSpec:
     """Claim the spec's port (owner = the spec, so the claim lapses when
-    the opening trace is garbage-collected) and remember the allocator."""
+    the opening trace is garbage-collected — unless the spec is
+    ``persistent``, in which case the allocator holds the spec strongly and
+    the claim survives until explicit close) and remember the allocator."""
     if spec.port is None:
         return spec
     alloc = allocator if allocator is not None else PORTS
     spec = spec.replace(allocator=alloc)
-    alloc.claim(spec.comm, spec.port, owner=spec)
+    alloc.claim(spec.comm, spec.port, owner=spec, persistent=spec.persistent)
     return spec
 
 

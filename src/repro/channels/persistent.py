@@ -1,0 +1,129 @@
+"""Persistent channel pool: open-once, serve-forever SMI channels.
+
+The transient channel lifecycle (open -> claim -> transfer -> close, once
+per traced call) is the right rendering of the paper's listings, but the
+wrong one for a decode loop that runs millions of steps: re-claiming a
+port per step is per-message setup cost the paper's whole design exists
+to avoid, and ACCL (PAPERS.md, arxiv 2403.18374) shows latency-sensitive
+collectives live or die on pre-established, reusable contexts.
+
+A :class:`ChannelPool` is that context.  It hands out one
+``ChannelSpec(persistent=True)`` per layer tag — the port claim is held
+*strongly* by the communicator's :class:`~repro.core.comm.PortAllocator`
+(see ``claim(persistent=True)``), so it survives trace exits and garbage
+collection of every compiled step that used it — and re-tags each layer
+under a pool prefix (default ``"serve."``), so the ledger / netsim
+taxonomy separates serving traffic from training traffic while the
+tag/ledger machinery keeps tallying every step.  Transport *instances*
+still resolve fresh per trace from the spec (persistence is the port
+claim and the spec identity, not a live backend object), which keeps the
+packet router's cross-trace reuse guard satisfied.
+
+Lifecycle: the serving engine creates one pool, threads it through
+``ParallelCtx(channels=pool)`` so every ``layer_spec`` call inside the
+decode step resolves to the pool's persistent spec for its tag, and
+releases every claim at engine shutdown via :meth:`ChannelPool.close`
+(or a ``with`` scope).
+"""
+
+from __future__ import annotations
+
+from ..core.comm import Communicator, PortAllocator
+from ..obs import trace as obs
+from .channel import PORTS, _claim
+from .spec import ChannelSpec
+
+
+class ChannelPool:
+    """Per-tag registry of persistent channel specs on one communicator.
+
+    Ports are assigned sequentially from ``base_port`` in first-request
+    order — deterministic for a fixed model architecture, which is what
+    makes the claim set reproducible across engine restarts.
+    """
+
+    def __init__(self, comm: Communicator, *, prefix: str = "serve.",
+                 base_port: int = 100, transport=None, wire: str = "raw",
+                 plan=None, allocator: PortAllocator | None = None):
+        self.comm = comm
+        self.prefix = prefix
+        self.transport = transport
+        self.wire = wire
+        self.plan = plan
+        self.allocator = allocator if allocator is not None else PORTS
+        self._specs: dict[str, ChannelSpec] = {}
+        self._next_port = base_port
+        self.closed = False
+
+    # -- tag namespace -------------------------------------------------------
+
+    def retag(self, tag: str) -> str:
+        """The pool's stats bucket for a layer tag (idempotent)."""
+        return tag if tag.startswith(self.prefix) else self.prefix + tag
+
+    # -- spec registry -------------------------------------------------------
+
+    def spec(self, tag: str, *, kind: str = "allreduce", wire: str | None = None,
+             plan=None, transport=None, n_chunks: int = 1,
+             op=None, key: str | None = None) -> ChannelSpec:
+        """The persistent spec for ``tag``: created (and its port claimed,
+        strongly) on first request, returned verbatim afterwards — one
+        claim per layer for the lifetime of the pool.  ``key`` overrides
+        the registry key (default: the retagged tag) so two channels of
+        different kinds can share one stats tag (the migration gather /
+        scatter pair)."""
+        assert not self.closed, "ChannelPool is closed"
+        full = self.retag(tag)
+        k = key if key is not None else full
+        s = self._specs.get(k)
+        if s is None:
+            port = self._next_port
+            self._next_port += 1
+            s = ChannelSpec(
+                comm=self.comm, kind=kind, tag=full, port=port,
+                persistent=True,
+                wire=wire if wire is not None else self.wire,
+                plan=plan if plan is not None else self.plan,
+                transport=(transport if transport is not None
+                           else self.transport),
+                n_chunks=n_chunks, op=op,
+            )
+            s = _claim(s, self.allocator)
+            if obs.TRACING:
+                obs.emit("channel.open", tag=s.stats_tag, port=s.port,
+                         channel_kind=kind, wire=s.wire, persistent=True)
+            self._specs[k] = s
+        return s
+
+    def specs(self) -> dict[str, ChannelSpec]:
+        """{retagged tag: persistent spec} opened so far."""
+        return dict(self._specs)
+
+    def ports(self) -> dict[str, int]:
+        return {tag: s.port for tag, s in self._specs.items()}
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    def __contains__(self, tag: str) -> bool:
+        return self.retag(tag) in self._specs
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Release every persistent claim (idempotent).  This is the ONLY
+        way a persistent port comes back — trace exits never lapse it."""
+        for s in self._specs.values():
+            if obs.TRACING:
+                obs.emit("channel.close", tag=s.stats_tag, port=s.port,
+                         channel_kind=s.kind, persistent=True)
+            s.release_port()
+        self._specs.clear()
+        self.closed = True
+
+    def __enter__(self) -> "ChannelPool":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -52,6 +52,12 @@ class ChannelSpec:
     root: int = 0
     #: claimed hardware endpoint id; ``None`` = anonymous (no claim)
     port: int | None = 0
+    #: persistent lifecycle: the port claim is held by strong reference on
+    #: the allocator — it survives trace exits (no weakref lapse) and is
+    #: released only on explicit close / pool shutdown.  The serving
+    #: engine's per-layer channels use this; transient channels (default)
+    #: keep the weakref lifecycle.
+    persistent: bool = False
     transport: object = field(default=None, compare=False)
     wire: str = "raw"
     tag: str | None = None

@@ -55,6 +55,12 @@ class ModelConfig:
     dtype: str = "bfloat16"
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
+    # comm: default tuning plan for the model's layer channels.  "auto"
+    # (the default for every arch) hands backend/wire/chunk selection per
+    # tag to the netsim tuner whenever the launch comm_mode doesn't pin a
+    # backend (bare "smi"); an explicit "smi:<backend>" comm_mode — or
+    # cfg.scaled(comm_plan=None) — is the escape hatch that pins it.
+    comm_plan: str | None = "auto"
     source: str = ""               # provenance tag from the assignment
 
     # ------------------------------------------------------------- derived

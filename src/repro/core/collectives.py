@@ -476,17 +476,21 @@ def _stream_scatter_impl(x: jax.Array, comm: Communicator, *, root: int = 0, tra
 #
 # DEPRECATED since PR 8: model/optimizer code routes through the tagged
 # layer API in repro/parallel (which drives the same _stream_*_impl
-# schedules through per-layer ChannelSpecs); these shims stay for direct
-# collective callers and the shim-equivalence tests, but warn.
+# schedules through per-layer ChannelSpecs).  PR 9 retired the last
+# in-repo call sites (scripts/check_no_stream_shims.py keeps it that way
+# under src/); the shims survive only for external callers, the
+# shim-equivalence test and the deprecation-warning sweep, and will be
+# removed in a future PR.
 # ---------------------------------------------------------------------------
 
 
 def _deprecated_shim(name: str, alt: str):
     warnings.warn(
         f"{name} is a deprecated transient-channel shim: untagged, untuned "
-        f"comm invisible to the per-tag step accounting.  Use {alt} (see "
-        "repro/parallel, DESIGN.md §12), or open a tagged channel via "
-        "repro.channels.",
+        f"comm invisible to the per-tag step accounting.  PR 9 retired the "
+        f"last in-repo call sites; this wrapper is slated for removal.  Use "
+        f"{alt} (see repro/parallel, DESIGN.md §12), or open a tagged "
+        "channel via repro.channels.",
         DeprecationWarning,
         stacklevel=3,
     )

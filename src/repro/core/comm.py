@@ -134,12 +134,21 @@ class PortAllocator:
     poison the allocator.  Ownerless claims (the bare ``claim(comm, port)``
     form) persist until released, as before.
 
+    A *persistent* claim (``claim(..., persistent=True)`` — the
+    ``ChannelSpec(persistent=True)`` lifecycle) holds its owner by strong
+    reference instead: the claim survives trace exits and garbage
+    collection of every channel that used it, and is released only by an
+    explicit owner release (channel/pool close, engine shutdown) or
+    ``release_all``.  This is the serving-engine lifecycle — one port
+    endpoint reused across millions of decode steps.
+
     Claims are keyed per communicator *instance*: two distinct
     communicators may both use port 0 — they are different route fabrics —
     but one communicator's port 0 is a single hardware endpoint.
     """
 
-    #: id(comm) -> {port: owner weakref | None (ownerless / permanent)}
+    #: id(comm) -> {port: owner weakref (transient) | owner object
+    #: (persistent) | None (ownerless / permanent)}
     used: dict[int, dict] = field(default_factory=dict)
 
     def _ports(self, comm: Communicator) -> dict:
@@ -150,18 +159,34 @@ class PortAllocator:
             weakref.finalize(comm, self.used.pop, key, None)
         return self.used[key]
 
-    def claim(self, comm: Communicator, port: int, owner=None) -> int:
+    @staticmethod
+    def _owner_of(entry):
+        """(live, owner) of a claim entry: ownerless entries are live with
+        no owner; weakref entries are live while the referent is; strong
+        (persistent) entries are always live."""
+        if entry is None:
+            return True, None
+        if isinstance(entry, weakref.ref):
+            cur = entry()
+            return cur is not None, cur
+        return True, entry
+
+    def claim(self, comm: Communicator, port: int, owner=None,
+              persistent: bool = False) -> int:
         ports = self._ports(comm)
         if port in ports:
-            prev = ports[port]
-            if prev is None or prev() is not None:
+            live, _ = self._owner_of(ports[port])
+            if live:
                 raise ValueError(
                     f"port {port} already claimed on communicator "
                     f"{comm.name!r}; SMI ports identify distinct hardware "
                     "endpoints and cannot be shared — close the other "
                     "channel (or pick another port) first"
                 )
-        ports[port] = weakref.ref(owner) if owner is not None else None
+        if owner is None:
+            ports[port] = None
+        else:
+            ports[port] = owner if persistent else weakref.ref(owner)
         return port
 
     def release(self, comm: Communicator, port: int, owner=None) -> None:
@@ -172,10 +197,10 @@ class PortAllocator:
         ports = self.used.get(id(comm), {})
         if port not in ports:
             return
-        ref = ports[port]
-        cur = ref() if ref is not None else None
+        entry = ports[port]
+        _, cur = self._owner_of(entry)
         if owner is not None:
-            if ref is None or (cur is not None and cur is not owner):
+            if entry is None or (cur is not None and cur is not owner):
                 return  # ownerless or another live owner holds the port now
         elif cur is not None:
             return  # bare release frees only ownerless/dead claims
@@ -188,6 +213,6 @@ class PortAllocator:
         """Ports currently claimed (live owners / ownerless) on ``comm``."""
         ports = self.used.get(id(comm), {})
         return tuple(
-            sorted(p for p, ref in ports.items()
-                   if ref is None or ref() is not None)
+            sorted(p for p, entry in ports.items()
+                   if self._owner_of(entry)[0])
         )

@@ -95,13 +95,22 @@ def _batch_spec(shape_leaf, batch_axes, mesh):
     return P(*((None,) * len(shape_leaf.shape)))
 
 
+def _layer_plan(cfg: ModelConfig, comm_mode: str):
+    """The per-tag layer plan a launch selects: the config's ``comm_plan``
+    (default "auto") when the comm_mode string doesn't pin a transport
+    backend; an explicit ``smi:<backend>`` (or bulk/none) is the escape
+    hatch and keeps layers on the pinned backend (plan None)."""
+    return cfg.comm_plan if comm_mode == "smi" else None
+
+
 def build_train(cfg: ModelConfig, mesh, shape: ShapeConfig, st: TrainSettings):
     """Returns dict with jitted ``step``, ``init_state``, shardings, specs."""
     batch_axes = batch_axes_of(mesh)
     ctx = make_ctx(mesh, model_axis="model", batch_axes=batch_axes,
                    comm_mode=st.comm_mode,
                    opt_shared_gather=st.shared_gather,
-                   opt_ring_attn=st.ring_attn)
+                   opt_ring_attn=st.ring_attn,
+                   plan=_layer_plan(cfg, st.comm_mode))
     pspecs = lm_specs(cfg, ctx)
     key = jax.random.PRNGKey(0)
     pshapes = jax.eval_shape(lambda: init_lm(key, cfg, ctx))
@@ -191,7 +200,7 @@ def build_serve(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     """serve_step: one token for the whole batch against a full KV cache."""
     batch_axes = batch_axes_of(mesh)
     ctx = make_ctx(mesh, model_axis="model", batch_axes=batch_axes,
-                   comm_mode=comm_mode)
+                   comm_mode=comm_mode, plan=_layer_plan(cfg, comm_mode))
     pspecs = lm_specs(cfg, ctx)
     key = jax.random.PRNGKey(0)
     pshapes = jax.eval_shape(lambda: init_lm(key, cfg, ctx))
@@ -265,13 +274,140 @@ def build_serve(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     )
 
 
+def build_continuous_serve(cfg: ModelConfig, mesh, *, comm_mode: str = "smi",
+                           batch_slots: int = 4, capacity: int = 128,
+                           fsdp: str | bool = "auto"):
+    """Tensor-parallel runtime for the continuous-batching engine.
+
+    Returns the ``runtime`` dict :class:`~repro.serving.ContinuousEngine`
+    consumes: the shard_map'd per-slot decode step (``pos`` is a (B,)
+    vector), the slot-invalidation step, the two migration legs on the
+    pool's ``serve.migrate`` gather/scatter channels, and the
+    :class:`~repro.channels.ChannelPool` whose persistent port claims
+    outlive every trace (released only by ``pool.close()`` / engine
+    shutdown).  Every layer channel inside the step resolves to ONE
+    persistent pool spec per tag, reused across all decode steps.
+
+    Slots are batch rows replicated over the data axes (slot scheduling
+    is a global decision); the KV cache stays sequence-sharded over the
+    model axis, which is what migration streams across ranks.
+    """
+    import dataclasses as _dc
+
+    from ..channels import ChannelPool
+    from ..serving.continuous import (
+        migrate_gather,
+        migrate_scatter,
+        open_migration,
+        reset_slot,
+    )
+
+    ctx = make_ctx(mesh, model_axis="model", batch_axes=(),
+                   comm_mode=comm_mode, plan=_layer_plan(cfg, comm_mode))
+    pool = gspec = sspec = None
+    if ctx.is_smi and ctx.model_comm is not None:
+        pool = ChannelPool(ctx.model_comm, prefix="serve.")
+        ctx = _dc.replace(ctx, channels=pool)
+        gspec, sspec = open_migration(pool)
+    pspecs = lm_specs(cfg, ctx)
+    key = jax.random.PRNGKey(0)
+    pshapes = jax.eval_shape(lambda: init_lm(key, cfg, ctx))
+    if fsdp == "auto":
+        total = sum(
+            int(jnp.prod(jnp.asarray(l.shape))) for l in jax.tree.leaves(pshapes)
+        )
+        fsdp = (total / ctx.tp) * 2 > 10e9
+    batch_axes = batch_axes_of(mesh)
+    plan = build_fsdp_plan(pshapes, pspecs, mesh, batch_axes) if fsdp else None
+    store_specs = fsdp_storage_specs(pspecs, plan, batch_axes) if fsdp else pspecs
+    cspecs = lm_cache_specs(cfg, ctx, shard_batch=False)
+
+    def serve_step(params, caches, token, pos):
+        return lm_decode_step(params, caches, token, pos, cfg, ctx,
+                              gather_logits=False, fsdp_plan=plan)
+
+    tok_spec = P(None, None) if cfg.n_codebooks > 1 else P(None)
+    logit_spec = (
+        P(None, "model", None) if cfg.n_codebooks > 1 else P(None, "model")
+    )
+    param_sh = _sh(mesh, store_specs)
+    cache_sh = _sh(mesh, cspecs)
+    step = jax.jit(
+        jax.shard_map(
+            serve_step, mesh=mesh,
+            in_specs=(store_specs, cspecs, tok_spec, P(None)),
+            out_specs=(logit_spec, cspecs), check_vma=False,
+        ),
+        in_shardings=(param_sh, cache_sh, None, None),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+
+    reset = jax.jit(
+        jax.shard_map(reset_slot, mesh=mesh, in_specs=(cspecs, P()),
+                      out_specs=cspecs, check_vma=False),
+        in_shardings=(cache_sh, None), out_shardings=cache_sh,
+        donate_argnums=(0,),
+    )
+
+    # migration legs: gather every rank's packed slot image to the root,
+    # later scatter it back out into the destination slot.  The in-flight
+    # handle is the per-rank (P, N) gather result, stacked over the model
+    # axis — opaque to the engine.
+    if gspec is not None:
+        def mig_start(caches, slot):
+            return migrate_gather(caches, slot, gspec)
+
+        def mig_finish(caches, inflight, slot):
+            return migrate_scatter(caches, inflight, slot, sspec)
+    else:
+        # bulk / non-SMI: no channels — the image round-trips locally
+        from ..serving.continuous import pack_slot, unpack_slot
+
+        def mig_start(caches, slot):
+            return pack_slot(caches, slot)[None]
+
+        def mig_finish(caches, inflight, slot):
+            return unpack_slot(caches, inflight[0], slot)
+
+    migrate_start = jax.jit(
+        jax.shard_map(mig_start, mesh=mesh, in_specs=(cspecs, P()),
+                      out_specs=P("model", None), check_vma=False),
+        in_shardings=(cache_sh, None),
+    )
+    migrate_finish = jax.jit(
+        jax.shard_map(mig_finish, mesh=mesh,
+                      in_specs=(cspecs, P("model", None), P()),
+                      out_specs=cspecs, check_vma=False),
+        in_shardings=(cache_sh, None, None), out_shardings=cache_sh,
+        donate_argnums=(0,),
+    )
+
+    init_caches = jax.jit(
+        jax.shard_map(
+            lambda: lm_caches(cfg, batch_slots, capacity=capacity, ctx=ctx),
+            mesh=mesh, in_specs=(), out_specs=cspecs, check_vma=False,
+        ),
+        out_shardings=cache_sh,
+    )
+
+    return dict(
+        ctx=ctx, pool=pool, step=step, reset=reset,
+        migrate_start=migrate_start, migrate_finish=migrate_finish,
+        init_caches=init_caches, batch_slots=batch_slots, capacity=capacity,
+        param_sharding=param_sh, cache_sharding=cache_sh,
+        store_specs=store_specs, plan=plan,
+    )
+
+
 def build_prefill(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
                   comm_mode: str = "smi", fsdp: str | bool = "auto",
                   shared_gather: bool = False, ring_attn: bool = False):
     batch_axes = batch_axes_of(mesh)
     ctx = make_ctx(mesh, model_axis="model", batch_axes=batch_axes,
                    comm_mode=comm_mode, opt_shared_gather=shared_gather,
-                   opt_ring_attn=ring_attn)
+                   opt_ring_attn=ring_attn,
+                   plan=_layer_plan(cfg, comm_mode))
     pspecs = lm_specs(cfg, ctx)
     key = jax.random.PRNGKey(0)
     pshapes = jax.eval_shape(lambda: init_lm(key, cfg, ctx))

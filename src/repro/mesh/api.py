@@ -49,6 +49,15 @@ class ParallelCtx:
     mesh: object | None = None
     opt_shared_gather: bool = False        # beyond-paper: one seq ring/block
     opt_ring_attn: bool = False            # beyond-paper: KV-streaming attn
+    #: persistent ChannelPool (serving): layer_spec resolves every layer
+    #: tag to the pool's persistent, pool-prefixed spec instead of a
+    #: transient per-call spec; None = transient lifecycle (training)
+    channels: object = field(default=None, compare=False)
+    #: default tuning plan for layer channels (None | "auto" | netsim
+    #: Plan): the model config's ``comm_plan`` when the launch string
+    #: doesn't pin a backend; an explicit ``smi:<backend>`` comm_mode is
+    #: the escape hatch that keeps this None
+    plan: object = field(default=None, compare=False)
 
     @property
     def is_smi(self) -> bool:
@@ -83,12 +92,13 @@ def make_ctx(
     matmul_fn=None,
     opt_shared_gather: bool = False,
     opt_ring_attn: bool = False,
+    plan=None,
 ) -> ParallelCtx:
     base_mode, transport = resolve_comm_mode(comm_mode)
     if mesh is None or model_axis is None:
         return ParallelCtx(comm_mode="none", transport=transport, mesh=mesh,
                            opt_shared_gather=opt_shared_gather,
-                           opt_ring_attn=opt_ring_attn)
+                           opt_ring_attn=opt_ring_attn, plan=plan)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     comm = Communicator.create(
         model_axis, (sizes[model_axis],), name=f"tp_{model_axis}",
@@ -104,6 +114,7 @@ def make_ctx(
         mesh=mesh,
         opt_shared_gather=opt_shared_gather,
         opt_ring_attn=opt_ring_attn,
+        plan=plan,
     )
 
 

@@ -31,7 +31,7 @@ from ..parallel import (
     ring_attention,
     row_parallel_linear,
 )
-from .common import rms_norm, rope, trunc_normal
+from .common import rms_norm, rope, rope_batched, trunc_normal
 
 
 def _pad_heads(H: int, tp: int) -> int:
@@ -238,7 +238,7 @@ def init_kv_cache(cfg, B_loc: int, capacity: int, ctx: ParallelCtx, dtype):
     return {
         "k": jnp.zeros((B_loc, cap_loc, cfg.n_kv_heads, cfg.hd), dtype),
         "v": jnp.zeros((B_loc, cap_loc, cfg.n_kv_heads, cfg.hd), dtype),
-        "slot_pos": jnp.full((cap_loc,), -1, jnp.int32),
+        "slot_pos": jnp.full((B_loc, cap_loc), -1, jnp.int32),
     }
 
 
@@ -249,12 +249,15 @@ def kv_cache_specs(ctx: ParallelCtx, shard_batch: bool = True):
     b = None
     if shard_batch and ctx.batch_axes:
         b = ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
-    return {"k": P(b, m, None, None), "v": P(b, m, None, None), "slot_pos": P(m)}
+    return {"k": P(b, m, None, None), "v": P(b, m, None, None),
+            "slot_pos": P(b, m)}
 
 
 def decode_attention(p, x, cache, pos, cfg, ctx: ParallelCtx):
     """One decode step.  x: (B, 1, D) replicated over model; ``pos`` is the
-    absolute position of the new token.  Returns (y (B, 1, D), cache')."""
+    absolute position of the new token — a scalar (wave decoding: every
+    row at the same position) or a (B,) int array (continuous batching:
+    one position per slot).  Returns (y (B, 1, D), cache')."""
     B = x.shape[0]
     hd = cfg.hd
     tp = ctx.tp
@@ -264,6 +267,7 @@ def decode_attention(p, x, cache, pos, cfg, ctx: ParallelCtx):
     r = ctx.rank()
     cap_loc = cache["k"].shape[1]
     capacity = cap_loc * tp
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
 
     x2d = x.reshape(B, -1)
     q_loc = (x2d @ p["wq"])
@@ -279,9 +283,8 @@ def decode_attention(p, x, cache, pos, cfg, ctx: ParallelCtx):
     if cfg.qk_norm:
         q_loc = rms_norm(q_loc, p["q_norm"], cfg.norm_eps)
         k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
-    pos_arr = jnp.full((1,), pos)
-    q_loc = rope(q_loc, pos_arr, cfg.rope_theta)
-    k_new = rope(k_new, pos_arr, cfg.rope_theta)
+    q_loc = rope_batched(q_loc, pos_b, cfg.rope_theta)
+    k_new = rope_batched(k_new, pos_b, cfg.rope_theta)
 
     # gather all query heads (tiny) so every device scans its cache slice
     if tp > 1:
@@ -291,24 +294,21 @@ def decode_attention(p, x, cache, pos, cfg, ctx: ParallelCtx):
     else:
         q = q_loc.reshape(B, Hp, hd)
 
-    # ring-buffer write: global slot = pos % capacity; shard r owns
-    # slots [r*cap_loc, (r+1)*cap_loc)
-    g_slot = pos % capacity
-    my = jnp.logical_and(g_slot >= r * cap_loc, g_slot < (r + 1) * cap_loc)
-    l_slot = jnp.clip(g_slot - r * cap_loc, 0, cap_loc - 1)
+    # ring-buffer write, per batch row: global slot = pos % capacity;
+    # shard r owns slots [r*cap_loc, (r+1)*cap_loc)
+    g_slot_b = pos_b % capacity
+    my_b = jnp.logical_and(g_slot_b >= r * cap_loc, g_slot_b < (r + 1) * cap_loc)
+    l_slot_b = jnp.clip(g_slot_b - r * cap_loc, 0, cap_loc - 1)
+    write = jnp.logical_and(
+        my_b[:, None], jnp.arange(cap_loc)[None, :] == l_slot_b[:, None]
+    )                                                        # (B, cap_loc)
     k_cache = jnp.where(
-        my,
-        lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), l_slot, 1),
-        cache["k"],
+        write[:, :, None, None], k_new.astype(cache["k"].dtype), cache["k"]
     )
     v_cache = jnp.where(
-        my,
-        lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), l_slot, 1),
-        cache["v"],
+        write[:, :, None, None], v_new.astype(cache["v"].dtype), cache["v"]
     )
-    slot_pos = jnp.where(
-        my, cache["slot_pos"].at[l_slot].set(pos), cache["slot_pos"]
-    )
+    slot_pos = jnp.where(write, pos_b[:, None], cache["slot_pos"])
 
     # partial attention over the local cache slice, all heads
     kv_sel_k = jnp.take(k_cache, kv_idx_full(cfg, Hp), axis=2)  # (B, cap_loc, Hp, hd)
@@ -317,15 +317,17 @@ def decode_attention(p, x, cache, pos, cfg, ctx: ParallelCtx):
         "bhd,bkhd->bhk", q.astype(jnp.float32) * hd ** -0.5,
         kv_sel_k.astype(jnp.float32),
     )
-    valid = slot_pos >= 0
-    valid = jnp.logical_and(valid, slot_pos <= pos)
+    valid = slot_pos >= 0                                    # (B, cap_loc)
+    valid = jnp.logical_and(valid, slot_pos <= pos_b[:, None])
     if cfg.local_window is not None:
-        valid = jnp.logical_and(valid, slot_pos > pos - cfg.local_window)
-    s = jnp.where(valid[None, None, :], s, -1e30)
+        valid = jnp.logical_and(
+            valid, slot_pos > pos_b[:, None] - cfg.local_window
+        )
+    s = jnp.where(valid[:, None, :], s, -1e30)
     m_loc = s.max(axis=-1)                                   # (B, Hp)
     m_g = pmax_tagged(m_loc, ctx, "tp.attn.out")
     pexp = jnp.exp(s - m_g[..., None])
-    pexp = jnp.where(valid[None, None, :], pexp, 0.0)
+    pexp = jnp.where(valid[:, None, :], pexp, 0.0)
     l_loc = pexp.sum(axis=-1)
     o_loc = jnp.einsum("bhk,bkhd->bhd", pexp, kv_sel_v.astype(jnp.float32))
     l_g = psum_tagged(l_loc, ctx, "tp.attn.out")

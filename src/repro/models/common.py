@@ -34,6 +34,21 @@ def rope(x, pos, theta: float = 10_000.0):
     return out.astype(x.dtype)
 
 
+def rope_batched(x, pos, theta: float = 10_000.0):
+    """Rotate-half RoPE for single-token decode with a *per-row* position.
+    x: (B, 1, H, D); pos: (B,).  Bit-identical to :func:`rope` when every
+    row sits at the same position (the wave-decoding case)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]      # (B, half)
+    cos = jnp.cos(ang)[:, None, None, :]
+    sin = jnp.sin(ang)[:, None, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
 def silu(x):
     return x * jax.nn.sigmoid(x)
 

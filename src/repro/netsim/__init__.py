@@ -32,6 +32,7 @@ from .schedule import (
     packet_bounds,
     packet_n_packets,
     predict_channel_stats,
+    predict_decode_step_stats,
     predict_halo_stats,
     predict_halo_time,
     predict_train_step_stats,
@@ -69,6 +70,7 @@ __all__ = [
     "packet_bounds",
     "packet_n_packets",
     "predict_channel_stats",
+    "predict_decode_step_stats",
     "predict_halo_stats",
     "predict_halo_time",
     "predict_train_step_stats",

@@ -157,7 +157,7 @@ def collective_rounds(
     if op == "reduce_scatter":
         return [ring_perm_round(P, nbytes / P) for _ in range(P - 1)]
     if op == "allreduce":
-        # ring RS + AG of nbytes/P blocks — the stream_allreduce schedule
+        # ring RS + AG of nbytes/P blocks — the streaming all-reduce schedule
         return [ring_perm_round(P, nbytes / P) for _ in range(2 * (P - 1))]
     raise ValueError(f"unknown collective op {op!r}")
 
@@ -551,6 +551,119 @@ def predict_train_step_stats(cfg, mesh_shape, shape, settings, *,
         for loc_elems in grad_rings:
             m = -(-loc_elems // dp)  # padded ring chunk
             ring("grad", [(m, 4, True)], dp, n_shifts=2 * (dp - 1), tkey=gkey)
+
+    return {t: acc[t] for t in sorted(acc)}
+
+
+def predict_decode_step_stats(cfg, mesh_shape, batch_slots, settings, *,
+                              capacity=128, migrations=0, prefix="serve.",
+                              pkt_elems=32, slack_steps=4):
+    """Per-tag predicted channel traffic of ONE traced serving decode step
+    (``lm_decode_step`` with ``gather_logits=False``, as lowered by
+    ``launch.steps.build_continuous_serve`` / ``build_serve``), plus
+    ``migrations`` optional slot migrations, as the channel ledger
+    measures it.
+
+    Same contract as :func:`predict_train_step_stats` (DESIGN.md §12):
+    byte-exact against a traced ``launch/serve --validate-comm`` run.
+    Tags carry the serving pool's ``prefix`` (default ``"serve."``).
+    ``settings`` duck-types comm_mode; ``mesh_shape`` is ``(dp, tp)`` —
+    serving replicates slots over the data axes, so only ``tp`` moves
+    bytes.  Migration always rides the static schedule on a raw wire
+    (the slot image is reinterpreted bytes), whatever the layer backend.
+    """
+    from ..transport import resolve_comm_mode
+
+    tp = int(mesh_shape[1])
+    base_mode, key = resolve_comm_mode(settings.comm_mode)
+    if base_mode != "smi":
+        raise ValueError(
+            f"predict_decode_step_stats models smi comm modes; got "
+            f"{settings.comm_mode!r}"
+        )
+    esz = 2 if cfg.dtype == "bfloat16" else 4
+    B = int(batch_slots)
+    D = cfg.d_model
+
+    acc: dict = {}
+
+    def add(tag, steps, nbytes):
+        e = acc.setdefault(prefix + tag, {"steps": 0, "bytes": 0})
+        e["steps"] += int(steps)
+        e["bytes"] += int(nbytes)
+
+    def ring(tag, leaves, P, n_shifts=None, tkey=key):
+        if P <= 1:
+            return
+        ns = (P - 1) if n_shifts is None else n_shifts
+        s, b = _shift_cost(leaves, tkey, pkt_elems=pkt_elems,
+                           slack_steps=slack_steps)
+        add(tag, s * ns, b * ns)
+
+    def psum(tag, nbytes, n=1):
+        if tp > 1:
+            add(tag, n, nbytes * n)
+
+    def allreduce(tag, elems, itemsize=None):
+        # _stream_allreduce_impl: pad to a tp multiple, RS + AG =
+        # 2*(tp-1) shifts of the padded ring chunk
+        m = -(-int(elems) // tp)
+        ring(tag, [(m, esz if itemsize is None else itemsize, True)], tp,
+             n_shifts=2 * (tp - 1))
+
+    act = lambda elems: [(int(elems), esz, True)]  # noqa: E731
+
+    # ---- embed: one partial-sum tally of the (B, D) embedding
+    psum("tp.embed", B * D * esz)
+
+    period = len(cfg.pattern)
+    n_full = cfg.n_layers // period
+    rem = cfg.n_layers % period
+    traced = (list(cfg.pattern) if n_full > 0 else []) + list(cfg.pattern[:rem])
+
+    hd = cfg.hd
+    Hp = -(-cfg.n_heads // tp) * tp
+
+    for kind in traced:
+        if tp <= 1:
+            break
+        if kind in ("attn", "moe"):
+            # query-head gather (1, B, H_loc*hd) + the four softmax /
+            # out-proj partial-sum tallies (m, l f32; o f32; y act-dtype)
+            ring("tp.attn.qkv", act(B * Hp * hd // tp), tp)
+            psum("tp.attn.out", B * Hp * 4)
+            psum("tp.attn.out", B * Hp * 4)
+            psum("tp.attn.out", B * Hp * hd * 4)
+            psum("tp.attn.out", B * D * esz)
+        if kind == "attn" or (kind == "moe" and cfg.shared_expert):
+            allreduce("tp.mlp.down", B * D)
+        if kind == "moe":
+            allreduce("ep.combine", B * D)
+        if kind == "ssm":
+            allreduce("ssm.out", B * D)
+        if kind == "rec":
+            allreduce("ssm.out", B * D)
+            allreduce("tp.mlp.down", B * D)
+
+    # ---- slot migrations: gather + scatter leg, (1, N) uint8 image per
+    # shift, static/raw pinned (lossless, backend-insensitive)
+    if migrations and tp > 1:
+        import jax
+
+        from ..core.comm import Communicator
+        from ..mesh.api import ParallelCtx
+        from ..models import lm_caches
+        from ..serving.continuous import slot_nbytes
+
+        comm = Communicator.create("model", (tp,), name="tp_model")
+        ctx = ParallelCtx(model_axis="model", batch_axes=(),
+                          model_comm=comm, comm_mode="smi")
+        shapes = jax.eval_shape(
+            lambda: lm_caches(cfg, B, capacity=capacity, ctx=ctx)
+        )
+        n = slot_nbytes(shapes)
+        ring("migrate", [(n, 1, False)], tp,
+             n_shifts=2 * (tp - 1) * int(migrations), tkey="static")
 
     return {t: acc[t] for t in sorted(acc)}
 

@@ -84,9 +84,21 @@ def layer_spec(ctx, tag: str, *, kind: str = "allreduce", wire: str = "raw",
     and launch-selected backend, the layer's stats tag, and the call's
     wire/plan overrides.  ``transport=None`` inherits ``ctx.transport``
     unless a ``plan`` is given (then the tuned plan picks the backend;
-    pass ``transport`` explicitly to pin it)."""
+    pass ``transport`` explicitly to pin it).
+
+    When the context carries a persistent :class:`~repro.channels.
+    ChannelPool` (``ctx.channels``, the serving engine), the layer's spec
+    comes from the pool instead: same config, but the tag is pool-prefixed
+    (``"serve.tp.attn.qkv"``), the port claim is persistent, and repeat
+    calls across decode steps reuse ONE spec per tag."""
+    if plan is None:
+        plan = ctx.plan
     if transport is None and plan is None:
         transport = ctx.transport
+    pool = ctx.channels
+    if pool is not None:
+        return pool.spec(tag, kind=kind, wire=wire, plan=plan,
+                         transport=transport, n_chunks=n_chunks, op=op)
     return ChannelSpec(
         comm=ctx.model_comm, kind=kind, tag=tag, wire=wire, plan=plan,
         transport=transport, port=port, n_chunks=n_chunks, op=op,
@@ -97,8 +109,11 @@ def _open(spec: ChannelSpec, x):
     """Fresh transport realising ``spec`` for one traced layer call,
     mirrored into the active capture ledger.  A ``plan`` ("auto" or a
     netsim Plan) selects backend + wire from the tuning table unless the
-    spec pins a transport; an int8-wire plan falls back to the raw wire
-    for non-floating payloads (exactness over the tuner's cost hint)."""
+    spec pins a transport — the tuner's choice is recorded in the active
+    ledger's ``plans`` per tag, so a capture shows *which* backend each
+    auto-planned layer actually ran; an int8-wire plan falls back to the
+    raw wire for non-floating payloads (exactness over the tuner's cost
+    hint)."""
     if spec.plan is not None and spec.transport is None:
         from ..netsim.tune import Plan
 
@@ -115,6 +130,8 @@ def _open(spec: ChannelSpec, x):
         ):
             p = dataclasses.replace(p, wire="raw")
         spec = spec.replace(transport=p.transport_key)
+        if spec.tag is not None:
+            ledger.record_plan(spec.tag, p.transport_key)
     return ledger.attach(spec.resolve())
 
 
@@ -130,6 +147,8 @@ def _open(spec: ChannelSpec, x):
 def psum_tagged(x, ctx, tag: str):
     if ctx.tp == 1:
         return x
+    if ctx.channels is not None:
+        tag = ctx.channels.retag(tag)
     ledger.tally(tag, 1, tree_bytes(x))
     return lax.psum(x, ctx.model_axis)
 
@@ -137,6 +156,8 @@ def psum_tagged(x, ctx, tag: str):
 def pmax_tagged(x, ctx, tag: str):
     if ctx.tp == 1:
         return x
+    if ctx.channels is not None:
+        tag = ctx.channels.retag(tag)
     ledger.tally(tag, 1, tree_bytes(x))
     return lax.pmax(x, ctx.model_axis)
 

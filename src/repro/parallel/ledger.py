@@ -49,6 +49,9 @@ class CommLedger:
     bytes_moved: int = 0
     #: tag -> {"steps": int, "bytes": int}
     by_tag: dict = field(default_factory=dict)
+    #: tag -> tuner-chosen transport key for ``plan="auto"`` layers (the
+    #: record the plan-auto config test asserts against)
+    plans: dict = field(default_factory=dict)
     _attached: set = field(default_factory=set, repr=False)
 
     def tally(self, tag: str | None, steps: int, nbytes: int):
@@ -57,6 +60,9 @@ class CommLedger:
         e = self.by_tag.setdefault(tag or UNTAGGED, {"steps": 0, "bytes": 0})
         e["steps"] += steps
         e["bytes"] += nbytes
+
+    def record_plan(self, tag: str, transport_key: str):
+        self.plans[tag] = transport_key
 
     def tag_counts(self, tag: str) -> tuple[int, int]:
         e = self.by_tag.get(tag, {"steps": 0, "bytes": 0})
@@ -101,6 +107,13 @@ def tally(tag: str | None, steps: int, nbytes: int):
     reductions); no-op outside a capture."""
     if _ACTIVE is not None:
         _ACTIVE.tally(tag, steps, nbytes)
+
+
+def record_plan(tag: str, transport_key: str):
+    """Record the tuner's backend choice for a ``plan="auto"`` layer tag;
+    no-op outside a capture."""
+    if _ACTIVE is not None:
+        _ACTIVE.record_plan(tag, transport_key)
 
 
 @contextmanager

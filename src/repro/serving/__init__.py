@@ -1,3 +1,15 @@
 from .engine import ServeEngine, Request
+from .continuous import (
+    ContinuousEngine,
+    copy_slot,
+    open_migration,
+    pack_slot,
+    reset_slot,
+    slot_nbytes,
+    unpack_slot,
+)
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = [
+    "ServeEngine", "Request", "ContinuousEngine", "reset_slot", "copy_slot",
+    "pack_slot", "unpack_slot", "slot_nbytes", "open_migration",
+]

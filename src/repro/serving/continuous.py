@@ -1,0 +1,373 @@
+"""Continuous-batching serve loop on persistent SMI channels.
+
+The wave engine (serving/engine.py) admits requests only at wave
+boundaries because the batch shares one cache position — correct, but a
+request arriving mid-wave waits for the whole wave to drain.  This module
+is the production loop:
+
+* **per-slot positions** — ``pos`` is a (B,) vector (decode_attention
+  generalises bit-identically from the scalar wave case), so every slot
+  advances independently;
+* **per-slot admission/invalidation** — a request lands in *any* free
+  slot; :func:`reset_slot` invalidates exactly that slot's rows across
+  every cache leaf (``slot_pos`` rows back to -1, state to 0) without
+  touching its batch-mates, so nothing ever leaks between requests;
+* **prefill/decode overlap** — newly admitted slots replay their prompts
+  through the same decode step their batch-mates are generating in (the
+  per-slot cursor), so there is no prefill barrier;
+* **persistent channels** — under tensor parallelism the decode step's
+  layer channels come from a :class:`~repro.channels.ChannelPool`
+  threaded through ``ParallelCtx(channels=pool)``: one
+  ``ChannelSpec(persistent=True)`` per layer tag, claimed once, reused
+  every step, released only at :meth:`ContinuousEngine.shutdown`;
+* **streaming migration** — a slot's cache rows (an opaque byte image
+  across every leaf) stream to the root over a persistent gather channel
+  and back out over a scatter channel, both tallying under
+  ``"serve.migrate"``, with the apps-layer start/finish split
+  (apps/halo.py): decode ticks for the other slots run between the two
+  legs while the migrating slot's image is in flight.
+
+Migration always rides the lossless static schedule on a raw wire: the
+image is reinterpreted bytes (bf16 KV, int32 positions, f32 recurrent
+state) and a lossy or reordering wire would corrupt it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..mesh.api import ParallelCtx
+from ..models import lm_caches, lm_decode_step
+from ..parallel import ledger
+from .engine import Request
+
+#: the stats tag migration traffic tallies under (pool-prefixed ->
+#: "serve.migrate"); gather and scatter legs share it
+MIGRATE_TAG = "migrate"
+
+#: sentinel occupying a slot whose cache image is in flight (migration):
+#: not decodable, not admittable
+_MIGRATING = object()
+
+
+# ------------------------------------------------------------- cache rows
+#
+# Cache trees are {"periods": tuple-of-stacked-block-trees, "rem":
+# tuple-of-block-trees} (models/transformer.py): leaves under "periods"
+# carry a leading layer dim, so their batch dim is 1; everything else is
+# batch-dim 0.  ``slot_pos`` leaves hold -1 for "no entry".
+
+
+def _batch_dim(path) -> int:
+    return 1 if any(getattr(k, "key", None) == "periods" for k in path) else 0
+
+
+def _is_slot_pos(path) -> bool:
+    return any(getattr(k, "key", None) == "slot_pos" for k in path)
+
+
+def reset_slot(caches, slot):
+    """Invalidate one batch slot across every cache leaf: its ``slot_pos``
+    rows go to -1 (no valid entry) and all other state to 0.  The other
+    slots' rows are untouched — this is the per-slot cache invalidation
+    continuous admission relies on."""
+    def one(path, leaf):
+        bdim = _batch_dim(path)
+        fill = -1 if _is_slot_pos(path) else 0
+        row = jnp.full(
+            leaf.shape[:bdim] + (1,) + leaf.shape[bdim + 1:], fill, leaf.dtype
+        )
+        return lax.dynamic_update_slice_in_dim(leaf, row, slot, bdim)
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def copy_slot(caches, src, dst):
+    """Local slot-to-slot row copy — the exactness oracle for the
+    streamed migration path."""
+    def one(path, leaf):
+        bdim = _batch_dim(path)
+        row = lax.dynamic_slice_in_dim(leaf, src, 1, bdim)
+        return lax.dynamic_update_slice_in_dim(leaf, row, dst, bdim)
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def pack_slot(caches, slot):
+    """One slot's rows across every (local) cache leaf as a flat (N,)
+    uint8 image, leaves in tree-flatten order.  Reinterpreted bytes
+    (bitcast), so the image is exact for every leaf dtype."""
+    bufs = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(caches):
+        row = lax.dynamic_slice_in_dim(leaf, slot, 1, _batch_dim(path))
+        flat = row.reshape(-1)
+        if flat.dtype != jnp.uint8:
+            flat = lax.bitcast_convert_type(flat, jnp.uint8)
+        bufs.append(flat.reshape(-1))
+    return jnp.concatenate(bufs)
+
+
+def unpack_slot(caches, image, slot):
+    """Inverse of :func:`pack_slot`: write the (N,) uint8 image back into
+    ``slot``'s rows across every cache leaf."""
+    leaves = jax.tree_util.tree_leaves_with_path(caches)
+    out, off = [], 0
+    for path, leaf in leaves:
+        bdim = _batch_dim(path)
+        row_shape = leaf.shape[:bdim] + (1,) + leaf.shape[bdim + 1:]
+        n = int(np.prod(row_shape))
+        nbytes = n * leaf.dtype.itemsize
+        piece = lax.slice_in_dim(image, off, off + nbytes, axis=0)
+        off += nbytes
+        if leaf.dtype != jnp.uint8:
+            piece = lax.bitcast_convert_type(
+                piece.reshape(n, leaf.dtype.itemsize), leaf.dtype
+            )
+        out.append(lax.dynamic_update_slice_in_dim(
+            leaf, piece.reshape(row_shape), slot, bdim
+        ))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(caches), out
+    )
+
+
+def slot_nbytes(cache_shapes) -> int:
+    """Bytes of one slot's packed image (for the migration channel's
+    predicted cost)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache_shapes):
+        bdim = _batch_dim(path)
+        shape = leaf.shape[:bdim] + (1,) + leaf.shape[bdim + 1:]
+        total += int(np.prod(shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+# --------------------------------------------------------- migration legs
+
+
+def open_migration(pool):
+    """The persistent gather/scatter channel pair one engine's migrations
+    ride — both tagged ``serve.migrate``, both pinned to the lossless
+    static schedule on a raw wire (the image is reinterpreted bytes)."""
+    g = pool.spec(MIGRATE_TAG, kind="gather", transport="static",
+                  wire="raw", key=pool.retag(MIGRATE_TAG) + "#gather")
+    s = pool.spec(MIGRATE_TAG, kind="scatter", transport="static",
+                  wire="raw", key=pool.retag(MIGRATE_TAG) + "#scatter")
+    return g, s
+
+
+def migrate_gather(caches, slot, gspec):
+    """Start leg: pack ``slot``'s local rows and stream every rank's image
+    to the root over the persistent gather channel.  Returns the in-flight
+    (P, N) buffer (meaningful at the root)."""
+    from ..channels.channel import _tagged
+    from ..core.collectives import _stream_gather_impl
+
+    image = pack_slot(caches, slot)
+    t = ledger.attach(gspec.resolve())
+    with _tagged(t, gspec.stats_tag):
+        return _stream_gather_impl(image[None], gspec.comm, root=gspec.root,
+                                   transport=t)
+
+
+def migrate_scatter(caches, inflight, slot, sspec):
+    """Finish leg: stream each rank's image back out of the root over the
+    persistent scatter channel and write it into ``slot``'s rows."""
+    from ..channels.channel import _tagged
+    from ..core.collectives import _stream_scatter_impl
+
+    t = ledger.attach(sspec.resolve())
+    with _tagged(t, sspec.stats_tag):
+        image = _stream_scatter_impl(inflight, sspec.comm, root=sspec.root,
+                                     transport=t)
+    return unpack_slot(caches, image[0], slot)
+
+
+# ------------------------------------------------------------- the engine
+
+
+class ContinuousEngine:
+    """Continuous-batching serve loop; greedy sampling, deterministic.
+
+    Single-device by default (``ctx=None``); pass the ``runtime`` dict
+    from :func:`repro.launch.steps.build_continuous_serve` to run the
+    tensor-parallel decode step on persistent channels.
+
+    A request's greedy output is bit-identical to the wave engine's for
+    the same params: each slot's computation depends only on its own row
+    (per-slot positions, per-row cache masking), so batch-mates — and
+    when they were admitted — cannot perturb it.
+    """
+
+    def __init__(self, cfg, params, *, ctx: ParallelCtx | None = None,
+                 batch_slots: int = 4, capacity: int = 128,
+                 eos: int | None = None, runtime: dict | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.eos = eos
+        if runtime is not None:
+            self.ctx = runtime["ctx"]
+            self.pool = runtime.get("pool")
+            self.B = runtime["batch_slots"]
+            self.capacity = runtime["capacity"]
+            self.caches = runtime["init_caches"]()
+            self._step = runtime["step"]
+            self._reset = runtime["reset"]
+            self._mig_start = runtime["migrate_start"]
+            self._mig_finish = runtime["migrate_finish"]
+        else:
+            self.ctx = ctx or ParallelCtx()
+            self.pool = None
+            self.B = batch_slots
+            self.capacity = capacity
+            self.caches = lm_caches(cfg, batch_slots, capacity=capacity,
+                                    ctx=self.ctx)
+            self._step = jax.jit(
+                lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg,
+                                                    self.ctx)
+            )
+            self._reset = jax.jit(reset_slot, donate_argnums=(0,))
+            # single-device "migration": the packed image round-trips
+            # locally (the comm legs need a TP runtime)
+            self._mig_start = jax.jit(pack_slot)
+            self._mig_finish = jax.jit(unpack_slot, donate_argnums=(0,))
+        B = self.B
+        self.slot_req: list = [None] * B
+        self.queue: list[Request] = []
+        self.pos = np.zeros(B, dtype=np.int32)      # per-slot next position
+        self.cursor = np.zeros(B, dtype=np.int64)   # per-slot prompt cursor
+        tok_shape = (B, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B,)
+        self._cur = np.zeros(tok_shape, dtype=np.int32)
+        self.steps_done = 0
+        self.admit_step: dict[int, int] = {}   # uid -> tick admitted
+        self.finish_step: dict[int, int] = {}  # uid -> tick completed
+
+    # -- queue / admission ---------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    @staticmethod
+    def _active(r) -> bool:
+        return r is not None and r is not _MIGRATING
+
+    def _admit(self) -> int:
+        """Admit waiting requests into free slots — any free slot, any
+        time; only that slot's cache rows are invalidated."""
+        n = 0
+        for i in range(self.B):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.caches = self._reset(self.caches, np.int32(i))
+                self.slot_req[i] = req
+                self.pos[i] = 0
+                self.cursor[i] = 0
+                self._cur[i] = 0
+                self.admit_step[req.uid] = self.steps_done
+                n += 1
+        return n
+
+    # -- the decode tick -----------------------------------------------------
+
+    def tick(self) -> list[Request]:
+        """Admit, run ONE decode step for every occupied slot (prompt
+        replay and generation overlap in the same step), harvest
+        completions.  Returns the requests completed this tick."""
+        self._admit()
+        if not any(self._active(r) for r in self.slot_req):
+            return []
+        for i, req in enumerate(self.slot_req):
+            if not self._active(req):
+                self._cur[i] = 0
+            elif self.cursor[i] < len(req.prompt):
+                self._cur[i] = req.prompt[int(self.cursor[i])]
+            # else: keep the sampled token from the last tick
+        logits, self.caches = self._step(
+            self.params, self.caches, jnp.asarray(self._cur),
+            jnp.asarray(self.pos),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=1))  # (B[, n_cb])
+        done: list[Request] = []
+        for i, req in enumerate(self.slot_req):
+            if not self._active(req):
+                continue
+            self.pos[i] += 1
+            self.cursor[i] += 1
+            if self.cursor[i] >= len(req.prompt):
+                tok = nxt[i]
+                req.out.append(tok.tolist() if tok.ndim else int(tok))
+                self._cur[i] = tok
+                hit_eos = (self.eos is not None and np.ndim(tok) == 0
+                           and int(tok) == self.eos)
+                if len(req.out) >= req.max_new or hit_eos:
+                    req.done = True
+                    self.finish_step[req.uid] = self.steps_done + 1
+                    done.append(req)
+                    self.slot_req[i] = None   # freed NOW: no wave barrier
+        self.steps_done += 1
+        return done
+
+    def run(self, *, max_steps: int = 256, arrivals=None) -> list[Request]:
+        """Drain the queue; returns completed requests.
+
+        ``arrivals`` is an optional ``[(tick, Request), ...]`` schedule
+        keyed on the engine's global tick clock (``steps_done``), so
+        latency benchmarks can replay a Poisson trace against continuous
+        admission."""
+        completed: list[Request] = []
+        pending = sorted(arrivals, key=lambda a: a[0]) if arrivals else []
+        steps = 0
+        while (pending or any(r is not None for r in self.slot_req)
+               or self.queue) and steps < max_steps:
+            while pending and pending[0][0] <= self.steps_done:
+                self.queue.append(pending.pop(0)[1])
+            if not self.queue and \
+                    not any(self._active(r) for r in self.slot_req):
+                self.steps_done += 1  # idle tick: waiting on arrivals
+                steps += 1
+                continue
+            completed.extend(self.tick())
+            steps += 1
+        return completed
+
+    # -- migration -----------------------------------------------------------
+
+    def migrate(self, src: int, dst: int, *, overlap_ticks: int = 0):
+        """Move the request in slot ``src`` into free slot ``dst`` by
+        streaming its cache image over the migration channels
+        (start/finish split): ``overlap_ticks`` decode ticks for the
+        other slots run between the gather and scatter legs while the
+        image is in flight.  Both slots are held out of decoding (and
+        admission) for the duration."""
+        req = self.slot_req[src]
+        assert self._active(req), "source slot must hold a request"
+        assert self.slot_req[dst] is None, "destination slot must be free"
+        inflight = self._mig_start(self.caches, np.int32(src))
+        self.slot_req[src] = _MIGRATING
+        self.slot_req[dst] = _MIGRATING
+        state = (self.pos[src], self.cursor[src], self._cur[src].copy())
+        for _ in range(overlap_ticks):
+            self.tick()
+        self.caches = self._mig_finish(self.caches, inflight, np.int32(dst))
+        self.slot_req[src] = None
+        self.slot_req[dst] = req
+        self.pos[dst], self.cursor[dst], self._cur[dst] = state
+        return req
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def shutdown(self):
+        """Release the pool's persistent port claims (the ONLY point a
+        persistent channel's port returns to the allocator)."""
+        if self.pool is not None and not self.pool.closed:
+            self.pool.close()
+
+    def __enter__(self) -> "ContinuousEngine":
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False

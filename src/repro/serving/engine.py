@@ -2,12 +2,14 @@
 
 A fixed-width batch of slots decodes in lock-step through the compiled
 ``serve_step``; when a wave of requests completes, the caches are reset and
-the next wave is admitted (wave batching — the correct scale-down of
-continuous batching given a batch-shared cache position; per-slot cache
-invalidation is the production extension and is what the decode shapes
-exercise in the dry-run).  Prompts are replayed through decode steps (exact
-at small scale; the 32k-prefill *shape* exercises the dedicated prefill
-path).  Greedy sampling; deterministic.
+the next wave is admitted.  Wave batching shares ONE cache position across
+the batch (the ``pos`` local in :meth:`ServeEngine.run`) — the per-slot
+positions, per-slot admission, and per-slot cache invalidation that lift
+this restriction live in :class:`~repro.serving.continuous.
+ContinuousEngine`, which this engine remains the bit-exactness oracle
+for.  Prompts are replayed through decode steps (exact at small scale; the
+32k-prefill *shape* exercises the dedicated prefill path).  Greedy
+sampling; deterministic.
 """
 
 from __future__ import annotations
@@ -41,9 +43,10 @@ class ServeEngine:
         self.capacity = capacity
         self.eos = eos
         self.caches = lm_caches(cfg, batch_slots, capacity=capacity, ctx=self.ctx)
-        self.pos = np.zeros(batch_slots, dtype=np.int64)  # per-slot next pos
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.queue: list[Request] = []
+        self.admit_step: dict[int, int] = {}   # uid -> tick admitted
+        self.finish_step: dict[int, int] = {}  # uid -> tick completed
         self._step = jax.jit(
             lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg, self.ctx)
         )
@@ -67,16 +70,36 @@ class ServeEngine:
             )
         return n
 
-    def run(self, *, max_steps: int = 256) -> list[Request]:
-        """Drain the queue; returns completed requests."""
+    def run(self, *, max_steps: int = 256, arrivals=None) -> list[Request]:
+        """Drain the queue; returns completed requests.
+
+        ``arrivals`` is an optional ``[(tick, Request), ...]`` schedule: each
+        request joins the queue at its tick (idle ticks pass when nothing is
+        resident yet), so latency benchmarks can replay a Poisson trace.
+        ``admit_step`` / ``finish_step`` record per-uid admission/completion
+        ticks either way."""
         completed: list[Request] = []
-        self._fill_wave()
+        pending = sorted(arrivals, key=lambda a: a[0]) if arrivals else []
         tok_shape = (self.B, self.cfg.n_codebooks) if self.cfg.n_codebooks > 1 else (self.B,)
         cur = np.zeros(tok_shape, dtype=np.int32)
         cursor = np.zeros(self.B, dtype=np.int64)  # prompt read positions
         pos = 0
         steps = 0
-        while (any(r is not None for r in self.slot_req) or self.queue) and steps < max_steps:
+        while (pending or any(r is not None for r in self.slot_req)
+               or self.queue) and steps < max_steps:
+            while pending and pending[0][0] <= steps:
+                self.queue.append(pending.pop(0)[1])
+            if all(r is None for r in self.slot_req):
+                if self._fill_wave():
+                    pos = 0
+                    cur[:] = 0
+                    cursor[:] = 0
+                    for r in self.slot_req:
+                        if r is not None:
+                            self.admit_step[r.uid] = steps
+                else:
+                    steps += 1  # idle tick: waiting on arrivals
+                    continue
             # choose the input token per slot: prompt replay or last sample
             for i, req in enumerate(self.slot_req):
                 if req is None:
@@ -101,14 +124,10 @@ class ServeEngine:
                     )
                     if len(req.out) >= req.max_new or hit_eos:
                         req.done = True
+                        self.finish_step[req.uid] = steps + 1
                         completed.append(req)
                         self.slot_req[i] = None
                         cursor[i] = 0
             pos += 1
             steps += 1
-            if all(r is None for r in self.slot_req) and self.queue:
-                if self._fill_wave():
-                    pos = 0
-                    cur[:] = 0
-                    cursor[:] = 0
         return completed

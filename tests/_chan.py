@@ -1,0 +1,48 @@
+"""Channels-API equivalents of the retired ``stream_*`` shim calls.
+
+The deprecated ``repro.core.stream_*`` wrappers survive only for the
+shim-equivalence test (test_channels) and the deprecation-warning sweep
+(test_parallel_layers); every other test calls the supported surface — a
+transient anonymous-port collective channel
+(``repro.channels.open_*_channel``) — through these helpers, which keep
+the old call-site shape."""
+
+from repro.channels import (
+    open_allreduce_channel,
+    open_bcast_channel,
+    open_gather_channel,
+    open_reduce_channel,
+    open_scatter_channel,
+)
+
+
+def chan_bcast(x, comm, *, root=0, n_chunks=1, transport=None):
+    return open_bcast_channel(
+        comm, root=root, port=None, transport=transport, n_chunks=n_chunks
+    ).transfer(x)
+
+
+def chan_reduce(x, comm, *, root=0, n_chunks=1, op=None, transport=None):
+    return open_reduce_channel(
+        comm, root=root, port=None, op=op, transport=transport,
+        n_chunks=n_chunks,
+    ).transfer(x)
+
+
+def chan_gather(x, comm, *, root=0, transport=None):
+    return open_gather_channel(
+        comm, root=root, port=None, transport=transport
+    ).transfer(x)
+
+
+def chan_scatter(x, comm, *, root=0, transport=None):
+    return open_scatter_channel(
+        comm, root=root, port=None, transport=transport
+    ).transfer(x)
+
+
+def chan_allreduce(x, comm, *, quantize=None, dequantize=None, bidir=False,
+                   transport=None):
+    return open_allreduce_channel(
+        comm, port=None, transport=transport
+    ).transfer(x, quantize=quantize, dequantize=dequantize, bidir=bidir)

@@ -4,6 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _chan import (
+    chan_allreduce,
+    chan_bcast,
+    chan_gather,
+    chan_reduce,
+    chan_scatter,
+)
 from _hyp import given, settings, st
 from jax.sharding import PartitionSpec as P
 
@@ -13,13 +20,8 @@ from repro.core import (
     make_test_mesh,
     run_spmd,
     stream_allgather,
-    stream_allreduce,
     stream_alltoall,
-    stream_bcast,
-    stream_gather,
-    stream_reduce,
     stream_reduce_scatter,
-    stream_scatter,
     tree_bcast,
     tree_reduce,
     staged_bcast,
@@ -89,7 +91,7 @@ def test_allreduce(ring8):
     want = per_rank.sum(axis=0)
 
     def fn(v):
-        return stream_allreduce(v[0], comm)[None]
+        return chan_allreduce(v[0], comm)[None]
 
     x = jnp.asarray(per_rank)
     y = run_spmd(fn, mesh, P("x"), P("x"), x)
@@ -105,7 +107,7 @@ def test_allreduce_int8_compressed(ring8):
     q, dq = make_int8_codec()
 
     def fn(v):
-        return stream_allreduce(v[0], comm, quantize=q, dequantize=dq)[None]
+        return chan_allreduce(v[0], comm, quantize=q, dequantize=dq)[None]
 
     y = run_spmd(fn, mesh, P("x"), P("x"), jnp.asarray(per_rank))
     # int8 ring: loose tolerance; error-feedback at the optimizer recovers it
@@ -133,7 +135,7 @@ def test_bcast_ring(ring8, root, n_chunks):
     per_rank = rng.randn(PP, 8, 3).astype(np.float32)
 
     def fn(v):
-        return stream_bcast(v[0], comm, root=root, n_chunks=n_chunks)[None]
+        return chan_bcast(v[0], comm, root=root, n_chunks=n_chunks)[None]
 
     y = run_spmd(fn, mesh, P("x"), P("x"), jnp.asarray(per_rank))
     for r in range(PP):
@@ -148,7 +150,7 @@ def test_bcast_bus(bus8, root):
     per_rank = rng.randn(PP, 4, 2).astype(np.float32)
 
     def fn(v):
-        return stream_bcast(v[0], comm, root=root, n_chunks=2)[None]
+        return chan_bcast(v[0], comm, root=root, n_chunks=2)[None]
 
     y = run_spmd(fn, mesh, P("x"), P("x"), jnp.asarray(per_rank))
     for r in range(PP):
@@ -164,7 +166,7 @@ def test_reduce(ring8, root, n_chunks):
     want = per_rank.sum(axis=0)
 
     def fn(v):
-        return stream_reduce(v[0], comm, root=root, n_chunks=n_chunks)[None]
+        return chan_reduce(v[0], comm, root=root, n_chunks=n_chunks)[None]
 
     y = run_spmd(fn, mesh, P("x"), P("x"), jnp.asarray(per_rank))
     np.testing.assert_allclose(np.asarray(y[root]), want, rtol=1e-5)
@@ -180,7 +182,7 @@ def test_gather(ring8, root):
     shards = rng.randn(PP, 3, 2).astype(np.float32)
 
     def fn(v):
-        return stream_gather(v[0], comm, root=root)[None]
+        return chan_gather(v[0], comm, root=root)[None]
 
     y = run_spmd(fn, mesh, P("x"), P("x"), jnp.asarray(shards))
     got = np.asarray(y[root]).reshape(PP, 3, 2)
@@ -195,7 +197,7 @@ def test_scatter(ring8, root):
 
     def fn(v):
         # all ranks pass the same buffer; only root's content matters
-        return stream_scatter(v, comm, root=root)
+        return chan_scatter(v, comm, root=root)
 
     x = jnp.asarray(np.broadcast_to(full, (PP * 3, 2)).copy())
     y = run_spmd(lambda v: fn(v)[None], mesh, P(None), P("x"),
@@ -253,8 +255,8 @@ def test_property_bcast_reduce_duality(m, seed, root):
     x = rng.randn(PP, m * 2, 2).astype(np.float32)
 
     def fn(v):
-        b = stream_bcast(v[0], comm, root=root, n_chunks=1)
-        rduced = stream_reduce(b, comm, root=root, n_chunks=2)
+        b = chan_bcast(v[0], comm, root=root, n_chunks=1)
+        rduced = chan_reduce(b, comm, root=root, n_chunks=2)
         return rduced[None]
 
     y = run_spmd(fn, mesh, P("x"), P("x"), jnp.asarray(x))

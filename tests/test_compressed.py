@@ -25,6 +25,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from _chan import chan_allreduce, chan_bcast
 from repro.core import (
     Communicator,
     Topology,
@@ -32,8 +33,6 @@ from repro.core import (
     make_int8_codec,
     make_test_mesh,
     stream_allgather,
-    stream_allreduce,
-    stream_bcast,
     stream_p2p,
 )
 from repro.core.collectives import stream_reduce_scatter
@@ -153,9 +152,9 @@ def test_collectives_within_codec_bound(topo, backend, devices8):
     def run(tkey):
         def fn(v):
             t = get_transport(tkey)
-            bc = stream_bcast(v[0], comm, root=0, n_chunks=4, transport=t)
+            bc = chan_bcast(v[0], comm, root=0, n_chunks=4, transport=t)
             ag = stream_allgather(v[0], comm, transport=t)
-            ar = stream_allreduce(v[0], comm, transport=t)
+            ar = chan_allreduce(v[0], comm, transport=t)
             return bc[None], ag[None], ar[None]
 
         out = jax.jit(jax.shard_map(
@@ -182,7 +181,7 @@ def test_compressed_over_packet_router(devices8):
 
     def fn(v):
         t = get_transport("compressed:packet")
-        y = stream_allreduce(v[0], comm, transport=t)
+        y = chan_allreduce(v[0], comm, transport=t)
         ovf = t.stats.overflow
         return y[None], jnp.asarray(ovf, jnp.int32)[None]
 
@@ -383,8 +382,8 @@ def test_schedule_loop_rolled_scaling_matches_unrolled(devices8):
         if unroll:
             t.runtime_stats = True  # force _schedule_loop's unrolled path
         def fn(v):
-            return stream_bcast(v[0], comm, root=0, n_chunks=4,
-                                transport=t)[None]
+            return chan_bcast(v[0], comm, root=0, n_chunks=4,
+                              transport=t)[None]
         jax.jit(jax.shard_map(
             fn, mesh=mesh, in_specs=spec, out_specs=spec))(x)
         return t.stats.steps, t.stats.bytes_moved
@@ -481,7 +480,7 @@ def test_deprecated_quantize_kwargs_shim(devices8):
     q, dq = make_int8_codec(axis_elems=64)
 
     def fn(v):
-        return stream_allreduce(v[0], comm, quantize=q, dequantize=dq)[None]
+        return chan_allreduce(v[0], comm, quantize=q, dequantize=dq)[None]
 
     with pytest.warns(DeprecationWarning, match="transport='compressed'"):
         y = np.asarray(jax.jit(jax.shard_map(
@@ -496,7 +495,7 @@ def test_compressed_integer_allreduce_raises(devices8):
     x = jnp.ones((8, 16), jnp.int32)
 
     def fn(v):
-        return stream_allreduce(
+        return chan_allreduce(
             v[0], comm, transport=get_transport("compressed"))[None]
 
     with pytest.raises(TypeError, match="lossy"):

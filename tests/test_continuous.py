@@ -1,0 +1,289 @@
+"""Continuous-batching engine tests (serving/continuous.py, DESIGN.md §13).
+
+Four contracts:
+
+* **wave-oracle bit-identity** — a request's greedy tokens are identical
+  to the wave engine's (and to a solo run) no matter which slot it lands
+  in, when it was admitted, or who its batch-mates are: per-slot
+  positions, per-slot cache invalidation and per-slot prompt cursors must
+  never leak state.  Checked single-device and tensor-parallel (ring and
+  torus meshes, static and packet backends).
+* **slot churn** — randomized staggered arrivals through a small slot
+  pool drain completely and every output still equals its solo oracle
+  (no cache-row leaks across admission/eviction churn).
+* **migration exactness** — the packed byte image round-trip
+  (``pack_slot`` -> ``unpack_slot``) equals the local ``copy_slot``
+  oracle leaf-for-leaf, and a mid-decode slot migration never changes
+  the request's remaining tokens.
+* **persistent-channel lifecycle** — the serving pool's port claims
+  survive trace exits and garbage collection, and are released only by
+  engine shutdown / ``pool.close()``.
+
+Plus the serving twin of the train-step accounting regression:
+``netsim.predict_decode_step_stats`` equals the traced channel ledger to
+the byte per ``serve.*`` tag (the ``launch/serve --validate-comm``
+contract).
+"""
+
+import gc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke
+from repro.mesh.api import ParallelCtx
+from repro.models import init_lm, lm_caches
+from repro.serving import ContinuousEngine, Request, ServeEngine
+from repro.serving.continuous import copy_slot, pack_slot, unpack_slot
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = smoke(get_arch("yi-6b"))
+    params = init_lm(jax.random.PRNGKey(0), cfg, ParallelCtx())
+    return cfg, params
+
+
+def _reqs(prompts, max_new=4):
+    return [Request(uid=i, prompt=list(p), max_new=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _solo_outs(cfg, params, prompts, *, max_new=4, engine_cls=ServeEngine):
+    """{uid: tokens} with every request decoded alone — the oracle."""
+    outs = {}
+    for uid, p in enumerate(prompts):
+        eng = engine_cls(cfg, params, batch_slots=1, capacity=64)
+        eng.submit(Request(uid=uid, prompt=list(p), max_new=max_new))
+        done = eng.run(max_steps=200)
+        outs[uid] = done[0].out
+    return outs
+
+
+# ------------------------------------------------------ wave bit-identity
+
+
+def test_continuous_matches_wave_engine(engine_setup):
+    """Same prompts, same params: the continuous engine's greedy outputs
+    are bit-identical to the wave engine's, slot-for-slot."""
+    cfg, params = engine_setup
+    prompts = [[5, 7, 9], [11, 3], [4], [8, 2, 6, 1]]
+
+    wave = ServeEngine(cfg, params, batch_slots=2, capacity=64)
+    for r in _reqs(prompts):
+        wave.submit(r)
+    wave_done = {r.uid: r.out for r in wave.run(max_steps=300)}
+
+    cont = ContinuousEngine(cfg, params, batch_slots=2, capacity=64)
+    for r in _reqs(prompts):
+        cont.submit(r)
+    cont_done = {r.uid: r.out for r in cont.run(max_steps=300)}
+
+    assert sorted(cont_done) == sorted(wave_done) == [0, 1, 2, 3]
+    for uid in wave_done:
+        assert cont_done[uid] == wave_done[uid], f"uid {uid} diverged"
+
+
+def test_mid_stream_admission_does_not_perturb_residents(engine_setup):
+    """A request admitted into a freed slot mid-decode leaves its
+    still-running batch-mates' outputs untouched — and its own output
+    equals its solo run (the whole point of continuous batching)."""
+    cfg, params = engine_setup
+    prompts = [[5, 7, 9, 2], [11, 3], [6, 1, 4]]
+    solo = _solo_outs(cfg, params, prompts, max_new=5)
+
+    eng = ContinuousEngine(cfg, params, batch_slots=2, capacity=64)
+    # slots=2, three requests: uid 2 is admitted into whichever slot
+    # frees first, while the other resident keeps decoding
+    for r in _reqs(prompts, max_new=5):
+        eng.submit(r)
+    done = {r.uid: r.out for r in eng.run(max_steps=300)}
+    assert done == solo
+
+
+def test_slot_churn_no_cache_row_leaks(engine_setup):
+    """Property sweep: randomized prompts and Poisson-ish staggered
+    arrivals through 3 slots — every request's output equals its solo
+    oracle, so no admission/eviction sequence leaks cache rows."""
+    cfg, params = engine_setup
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(1, cfg.padded_vocab, rng.randint(1, 5)))
+               for _ in range(8)]
+    ticks = np.cumsum(rng.randint(0, 4, len(prompts)))
+    solo = _solo_outs(cfg, params, prompts, max_new=3)
+
+    eng = ContinuousEngine(cfg, params, batch_slots=3, capacity=64)
+    arrivals = [(int(t), r) for t, r in zip(ticks, _reqs(prompts, max_new=3))]
+    done = {r.uid: r.out for r in eng.run(max_steps=400, arrivals=arrivals)}
+    assert done == solo
+    assert all(r is None for r in eng.slot_req)  # fully drained
+    # bookkeeping: every request has admit/finish ticks, in order
+    for uid in solo:
+        assert eng.admit_step[uid] < eng.finish_step[uid]
+
+
+# ------------------------------------------------------------- migration
+
+
+def test_pack_unpack_matches_copy_slot_oracle(engine_setup):
+    """unpack(pack(src), dst) == copy_slot(src, dst) leaf-for-leaf: the
+    byte image is exact for every cache leaf dtype (bf16 KV, int32
+    slot_pos, f32 state)."""
+    cfg, params = engine_setup
+    caches = lm_caches(cfg, 3, capacity=16, ctx=ParallelCtx())
+    # make rows distinguishable: run two decode steps on real data
+    eng = ContinuousEngine(cfg, params, batch_slots=3, capacity=16)
+    for r in _reqs([[5, 7], [11, 3], [9]], max_new=2):
+        eng.submit(r)
+    eng.tick()
+    eng.tick()
+    caches = eng.caches
+
+    want = copy_slot(caches, 0, 2)
+    got = unpack_slot(caches, pack_slot(caches, 0), 2)
+    for w, g in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+
+def test_migration_preserves_output(engine_setup):
+    """Migrating a request to a different slot mid-decode changes nothing
+    about its remaining tokens (the image carries cache rows exactly;
+    pos/cursor/last-token travel with it)."""
+    cfg, params = engine_setup
+    prompts = [[5, 7, 9], [11, 3]]
+    solo = _solo_outs(cfg, params, prompts, max_new=6)
+
+    eng = ContinuousEngine(cfg, params, batch_slots=3, capacity=64)
+    for r in _reqs(prompts, max_new=6):
+        eng.submit(r)
+    for _ in range(4):
+        eng.tick()
+    moved = eng.migrate(0, 2)           # uid 0's cache image: slot 0 -> 2
+    assert eng.slot_req[2] is moved and eng.slot_req[0] is None
+    done = {r.uid: r.out for r in eng.run(max_steps=200)}
+    done.update({r.uid: r.out for r in [moved] if r.done})
+    assert done == solo
+
+
+# ---------------------------------------------- tensor-parallel engines
+
+
+TP_MESHES = {"ring": (1, 8), "torus": (2, 4)}
+
+
+def _tp_cfg():
+    # n_heads=8 divides both tp=8 and tp=4 evenly, so init_lm needs no
+    # head padding and single-device params equal the TP layout exactly
+    return smoke(get_arch("glm4-9b")).scaled(n_heads=8, d_model=128,
+                                             d_ff=128)
+
+
+@pytest.mark.parametrize("backend", ["static", "packet"])
+@pytest.mark.parametrize("dims", list(TP_MESHES.values()),
+                         ids=list(TP_MESHES))
+def test_tp_continuous_matches_wave_oracle(dims, backend, devices8):
+    """The tensor-parallel continuous engine on persistent channels
+    produces the same greedy tokens as the single-device wave engine, on
+    ring and torus meshes, static and packet backends."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import build_continuous_serve
+
+    cfg = _tp_cfg()
+    params = init_lm(jax.random.PRNGKey(0), cfg, ParallelCtx())
+    prompts = [[5, 7, 9], [11, 3], [4, 8]]
+
+    wave = ServeEngine(cfg, params, batch_slots=2, capacity=32)
+    for r in _reqs(prompts, max_new=3):
+        wave.submit(r)
+    want = {r.uid: r.out for r in wave.run(max_steps=200)}
+
+    mesh = make_mesh(dims, ("data", "model"))
+    rt = build_continuous_serve(cfg, mesh, comm_mode=f"smi:{backend}",
+                                batch_slots=2, capacity=32)
+    with ContinuousEngine(
+        cfg, jax.device_put(params, rt["param_sharding"]), runtime=rt,
+    ) as eng:
+        for r in _reqs(prompts, max_new=3):
+            eng.submit(r)
+        got = {r.uid: r.out for r in eng.run(max_steps=200)}
+    assert got == want, f"{backend} on {dims} diverged from wave oracle"
+
+
+def test_persistent_pool_lifecycle(devices8):
+    """The pool's port claims are strong: they survive trace exits and
+    gc of the compiled step, and come back ONLY at pool close (engine
+    shutdown) — the ChannelSpec(persistent=True) contract."""
+    from repro.channels import PORTS
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import build_continuous_serve
+
+    cfg = _tp_cfg()
+    mesh = make_mesh((1, 8), ("data", "model"))
+    rt = build_continuous_serve(cfg, mesh, comm_mode="smi:static",
+                                batch_slots=2, capacity=32)
+    pool, comm = rt["pool"], rt["ctx"].model_comm
+    assert pool is not None and not pool.closed
+
+    # trace the decode step: every layer tag claims its persistent port
+    pshapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg,
+                                             rt["ctx"]))
+    cshapes = jax.eval_shape(rt["init_caches"])
+    tok = jax.ShapeDtypeStruct((2,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((2,), jnp.int32)
+    lowered = rt["step"].lower(pshapes, cshapes, tok, pos)
+    ports = pool.ports()
+    assert len(ports) > 2  # layer channels + the migration pair
+    assert all(tag.startswith("serve.") for tag in ports)
+    assert set(ports.values()) <= set(PORTS.in_use(comm))
+
+    # the claim outlives the trace: drop the lowered step, collect, and
+    # re-trace — same specs, same ports, nothing lapsed in between
+    del lowered
+    gc.collect()
+    assert set(ports.values()) <= set(PORTS.in_use(comm))
+    rt["step"].lower(pshapes, cshapes, tok, pos)
+    assert pool.ports() == ports
+
+    pool.close()
+    assert pool.closed
+    assert not set(ports.values()) & set(PORTS.in_use(comm))
+
+
+# ------------------------------------- predicted-vs-measured regression
+
+
+def test_predict_decode_step_stats_matches_ledger(devices8):
+    """The serving decode-step predictor equals the traced channel
+    ledger to the byte per serve.* tag, migration legs included (the
+    ``launch/serve --validate-comm`` contract, DESIGN.md §13)."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import build_continuous_serve
+    from repro.netsim import predict_decode_step_stats
+    from repro.parallel import ledger
+
+    class St:
+        comm_mode = "smi:static"
+
+    cfg = smoke(get_arch("yi-6b"))
+    B, cap = 2, 32
+    mesh = make_mesh((2, 4), ("data", "model"))
+    rt = build_continuous_serve(cfg, mesh, comm_mode=St.comm_mode,
+                                batch_slots=B, capacity=cap)
+    pshapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg,
+                                             rt["ctx"]))
+    cshapes = jax.eval_shape(rt["init_caches"])
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    slot = jax.ShapeDtypeStruct((), jnp.int32)
+    with ledger.capture() as led:
+        rt["step"].lower(pshapes, cshapes, tok, pos)
+        infl = jax.eval_shape(rt["migrate_start"], cshapes, slot)
+        rt["migrate_start"].lower(cshapes, slot)
+        rt["migrate_finish"].lower(cshapes, infl, slot)
+    rt["pool"].close()
+    measured = {t: dict(e) for t, e in led.by_tag.items()}
+    predicted = predict_decode_step_stats(cfg, (2, 4), B, St,
+                                          capacity=cap, migrations=1)
+    assert predicted == measured

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _chan import chan_bcast, chan_reduce
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (
@@ -28,9 +29,7 @@ from repro.core import (
     make_test_mesh,
     reduce,
     stream_allgather,
-    stream_bcast,
     stream_p2p,
-    stream_reduce,
 )
 from repro.core.router import snake_bus
 from repro.netsim import (
@@ -348,8 +347,8 @@ def test_tuned_dispatchers_bit_identical(devices8):
             reduce(v[0], comm, root=0)[None]
 
     def ref(v):
-        return stream_bcast(v[0], comm, root=0)[None], \
-            stream_reduce(v[0], comm, root=0)[None]
+        return chan_bcast(v[0], comm, root=0)[None], \
+            chan_reduce(v[0], comm, root=0)[None]
 
     got = jax.jit(jax.shard_map(
         tuned, mesh=mesh, in_specs=spec, out_specs=(spec, spec)))(x)
@@ -406,7 +405,7 @@ def test_collective_round_tick_counts():
     from repro.core.routing import compute_route_table
 
     rt = compute_route_table(topo)
-    # chain bcast: n_chunks + P - 2 (the stream_bcast step count)
+    # chain bcast: n_chunks + P - 2 (the streamed-bcast schedule's steps)
     for nc in (1, 4, 16):
         ticks, _, _ = simulate_rounds(
             topo, rt, collective_rounds(topo, rt, "bcast", "ring", 4096.0,

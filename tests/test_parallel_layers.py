@@ -369,6 +369,33 @@ def test_legacy_shims_warn(shim):
 # --------------------------------------- predicted-vs-measured regression
 
 
+def test_plan_auto_choice_recorded_in_ledger():
+    """A ``plan="auto"`` layer consults the tuner at trace time and the
+    capture ledger records WHICH backend it chose, keyed by layer tag —
+    the observability contract the per-tag config defaults rely on."""
+    from repro.parallel import ledger
+    from repro.transport import is_transport_key
+
+    dims = (1, 8)
+    ctx = make_ctx(_mesh(dims), model_axis="model", batch_axes=("data",),
+                   comm_mode="smi", plan="auto")
+    x = jnp.asarray(_rng(20).randn(8 * ROWS_LOC, K).astype(np.float32))
+    w = jnp.asarray(_rng(21).randn(K, N).astype(np.float32))
+
+    def fn(xl, wl):
+        return column_parallel_linear(xl, wl, ctx)
+
+    with ledger.capture() as led:
+        run_spmd(fn, _mesh(dims),
+                 (P(("data", "model"), None), P(None, "model")),
+                 P("data", "model"), x, w)
+    assert "tp.col" in led.plans, led.plans
+    assert is_transport_key(led.plans["tp.col"])
+    # the tuned traffic still tallies under the layer's tag
+    steps, nbytes = led.tag_counts("tp.col")
+    assert steps > 0 and nbytes > 0
+
+
 def test_predict_train_step_stats_matches_ledger():
     """The full-train-step predictor equals the traced channel ledger to
     the byte per tag (the --validate-comm contract, DESIGN.md §12)."""

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _chan import chan_allreduce, chan_gather, chan_scatter
 from _hyp import given, settings, st
 from jax.sharding import PartitionSpec as P
 
@@ -13,12 +14,9 @@ from repro.core import (
     make_test_mesh,
     run_spmd,
     stream_allgather,
-    stream_allreduce,
     stream_alltoall,
-    stream_gather,
     stream_p2p,
     stream_reduce_scatter,
-    stream_scatter,
 )
 
 PP = 8
@@ -40,7 +38,7 @@ def test_property_rs_then_ag_is_allreduce(seed, m):
     def fn(v):
         rs = stream_reduce_scatter(v[0], comm)
         ag = stream_allgather(rs, comm)
-        ar = stream_allreduce(v[0], comm)
+        ar = chan_allreduce(v[0], comm)
         return ag[None], ar[None]
 
     ag, ar = run_spmd(fn, mesh, P("x"), (P("x"), P("x")), jnp.asarray(x))
@@ -72,8 +70,8 @@ def test_property_scatter_gather_roundtrip(seed, root):
     full = rng.randn(PP * 3, 2).astype(np.float32)
 
     def fn(v):
-        mine = stream_scatter(v, comm, root=root)
-        back = stream_gather(mine, comm, root=root)
+        mine = chan_scatter(v, comm, root=root)
+        back = chan_gather(mine, comm, root=root)
         return back[None]
 
     y = run_spmd(fn, mesh, P(None), P("x"), jnp.asarray(full))
@@ -113,8 +111,8 @@ def test_property_allreduce_linearity(seed):
     b = rng.randn(PP, 6).astype(np.float32)
 
     def fn(u, v):
-        lhs = stream_allreduce(u[0] + v[0], comm)
-        rhs = stream_allreduce(u[0], comm) + stream_allreduce(v[0], comm)
+        lhs = chan_allreduce(u[0] + v[0], comm)
+        rhs = chan_allreduce(u[0], comm) + chan_allreduce(v[0], comm)
         return lhs[None], rhs[None]
 
     lhs, rhs = run_spmd(fn, mesh, (P("x"), P("x")), (P("x"), P("x")),

@@ -74,6 +74,43 @@ def test_queue_drains_over_multiple_waves(engine_setup):
     assert same[0].out == same[1].out == same[2].out
 
 
+def test_wave_position_is_run_local(engine_setup):
+    """Regression: the engine once carried a dead ``self.pos`` instance
+    attribute shadowing the run-local wave position — a stale value there
+    would corrupt the greedy path of any wave after the first.  Position
+    is wave-local state now: identical prompts in back-to-back ``run()``
+    calls decode identically, and the attribute stays gone."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, batch_slots=1, capacity=64)
+    assert not hasattr(eng, "pos")
+    eng.submit(Request(uid=0, prompt=[5, 7], max_new=3))
+    first = eng.run(max_steps=50)
+    assert not hasattr(eng, "pos")
+    eng.submit(Request(uid=1, prompt=[5, 7], max_new=3))
+    second = eng.run(max_steps=50)
+    assert first[0].out == second[0].out
+
+
+def test_arrival_schedule_and_latency_bookkeeping(engine_setup):
+    """``run(arrivals=...)`` replays a timed trace: requests join the
+    queue at their tick (idle ticks pass while nothing is resident) and
+    admit/finish ticks land in ``admit_step``/``finish_step`` — the
+    counters the serving benchmark's latency percentiles come from."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, batch_slots=2, capacity=64)
+    arrivals = [(0, Request(uid=0, prompt=[5, 7], max_new=2)),
+                (6, Request(uid=1, prompt=[3], max_new=2))]
+    done = {r.uid: r for r in eng.run(max_steps=100, arrivals=arrivals)}
+    assert sorted(done) == [0, 1] and all(r.done for r in done.values())
+    assert eng.admit_step[0] == 0
+    assert eng.admit_step[1] >= 6          # not admitted before it arrived
+    for uid in (0, 1):
+        assert eng.finish_step[uid] > eng.admit_step[uid]
+    # an all-upfront submission decodes identically to the no-arrivals path
+    ref = _run(cfg, params, [[5, 7]], batch_slots=2, max_new=2)
+    assert done[0].out == ref[0].out
+
+
 def test_eos_early_exit(engine_setup):
     cfg, params = engine_setup
     probe = _run(cfg, params, [[5, 7]], batch_slots=1, max_new=4)

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _chan import chan_allreduce, chan_bcast
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (
@@ -18,8 +19,6 @@ from repro.core import (
     Topology,
     make_test_mesh,
     stream_allgather,
-    stream_allreduce,
-    stream_bcast,
     stream_p2p,
 )
 from repro.core.router import snake_bus
@@ -49,9 +48,9 @@ def _run_collectives(comm, mesh, spec, x, backend):
 
     def fn(v):
         t = _transport(backend)
-        bc = stream_bcast(v[0], comm, root=0, n_chunks=4, transport=t)
+        bc = chan_bcast(v[0], comm, root=0, n_chunks=4, transport=t)
         ag = stream_allgather(v[0], comm, transport=t)
-        ar = stream_allreduce(v[0], comm, transport=t)
+        ar = chan_allreduce(v[0], comm, transport=t)
         ovf = t.stats.overflow
         if ovf is None:
             ovf = jnp.zeros((), jnp.int32)
