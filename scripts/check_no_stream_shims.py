@@ -1,55 +1,37 @@
 """CI lint guard: no deprecated ``stream_*`` collective shims under src/.
 
-The ``stream_bcast`` / ``stream_reduce`` / ``stream_gather`` /
-``stream_scatter`` / ``stream_allreduce`` wrappers are deprecated since
-PR 8 — the channels API (``repro.channels.open_*_channel`` and
-``ChannelSpec``) is the supported surface — and are slated for removal
-once external callers migrate (PR 9 bumped the warnings).  This guard
-fails CI when any *new* in-tree use appears under ``src/`` outside the
-shims' definition site, so the deprecation can only ever move forward.
+Since PR 10 this script is a thin shim over smilint rule **SMI001**
+(``repro.analysis.rules.NoStreamShims``) — the generalized AST pass that
+also checks close discipline, reserved ports, and raw collectives.  The
+entry point survives so existing CI invocations and habits keep working;
+new callers should run ``python scripts/smilint.py --ast`` instead.
 
     python scripts/check_no_stream_shims.py [ROOT]
+
+Stays importable without jax: ``repro.analysis.rules`` is stdlib-only.
 """
 
 from __future__ import annotations
 
 import pathlib
-import re
 import sys
-
-SHIMS = ("stream_bcast", "stream_reduce", "stream_gather",
-         "stream_scatter", "stream_allreduce")
-PAT = re.compile(r"\b(" + "|".join(SHIMS) + r")\b")
-
-#: the only files allowed to mention the shims: their definition site
-#: and the package re-export that keeps them importable until removal
-ALLOWED = {
-    pathlib.PurePosixPath("src/repro/core/collectives.py"),
-    pathlib.PurePosixPath("src/repro/core/__init__.py"),
-}
 
 
 def main(argv=None) -> int:
-    root = pathlib.Path(argv[0]) if argv else pathlib.Path(
-        __file__).resolve().parent.parent
-    hits = []
-    for path in sorted((root / "src").rglob("*.py")):
-        rel = pathlib.PurePosixPath(path.relative_to(root).as_posix())
-        if rel in ALLOWED:
-            continue
-        for lineno, line in enumerate(
-                path.read_text().splitlines(), start=1):
-            m = PAT.search(line)
-            if m:
-                hits.append(f"{rel}:{lineno}: {line.strip()}")
+    here = pathlib.Path(__file__).resolve().parent.parent
+    root = pathlib.Path(argv[0]).resolve() if argv else here
+    sys.path.insert(0, str(here / "src"))  # the rules live in THIS repo
+    from repro.analysis.rules import NoStreamShims, lint_paths
+
+    hits = lint_paths(str(root), rules=(NoStreamShims(),))
     if hits:
         print("[no-stream-shims] deprecated stream_* shim use under src/ "
               "(use the channels API — repro.channels.open_*_channel):")
-        for h in hits:
-            print(f"  {h}")
+        for d in hits:
+            print(f"  {d}")
         return 1
     print("[no-stream-shims] ok: no stream_* shim references under src/ "
-          f"outside {sorted(str(p) for p in ALLOWED)}")
+          f"outside {sorted(NoStreamShims.ALLOWED)}")
     return 0
 
 

@@ -1,0 +1,26 @@
+"""smilint entry point: static + capture-mode SMI channel verifier.
+
+Thin wrapper over ``python -m repro.analysis.lint`` that works from a
+fresh checkout (adds ``src/`` to ``sys.path`` and anchors the AST sweep
+at the repo root).  See DESIGN.md §14 for the rule catalog.
+
+    python scripts/smilint.py                 # all three passes
+    python scripts/smilint.py --ast           # source lints only (no jax)
+    python scripts/smilint.py --corpus --json smilint.json
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--root" not in argv:
+        argv = ["--root", str(ROOT)] + argv
+    sys.exit(main(argv))

@@ -3,8 +3,17 @@
 Importing the package installs the JAX version-compat shims (see
 :mod:`repro.compat`) so the modern API surface (``jax.shard_map`` et al.)
 is available on every supported runtime before any submodule uses it.
+
+When jax is absent the install is skipped instead of failing the import:
+the stdlib-only analysis layer (``repro.analysis`` — the smilint AST
+rules and ledger verifier, DESIGN.md §14) must stay importable in
+jax-free environments (the CI lint job); everything that actually uses
+jax still fails at ITS import, with the real ImportError.
 """
 
-from . import compat as _compat
+import importlib.util as _ilu
 
-_compat.install()
+if _ilu.find_spec("jax") is not None:
+    from . import compat as _compat
+
+    _compat.install()

@@ -1,0 +1,48 @@
+"""smilint: static analysis for SMI channel programs (DESIGN.md §14).
+
+Two passes over two program sources:
+
+* **capture mode** (:mod:`repro.analysis.capture` + :mod:`.verify`) —
+  abstract interpretation: trace a program with every transport replaced
+  by a no-op accounting backend, then verify the recorded channel-op
+  ledger (port collisions, endpoint matching, push/pop balance, credit
+  windows, claim leaks, deadlock cycles);
+* **AST lints** (:mod:`repro.analysis.rules`) — source-level rules over
+  the tree (deprecated shims, close discipline, reserved ports, raw lax
+  collectives), with ``# smilint: ignore[RULE]`` suppression.
+
+CLI: ``python -m repro.analysis.lint`` / ``scripts/smilint.py``.
+
+This package root is jax-free: the AST pass (and the CI lint job, which
+has no jax) imports it freely.  ``capture`` / ``AbstractTransport`` pull
+in the transport stack and resolve lazily on first attribute access;
+``.programs`` and ``.lint`` pull in the launch stack and are imported
+explicitly by the CLI only.
+"""
+
+from .ops import (  # noqa: F401
+    CaptureLedger,
+    ChannelOp,
+    Program,
+    ProgramBuilder,
+    as_program,
+)
+from .verify import (  # noqa: F401
+    CATALOG,
+    Diagnostic,
+    verify_ledger,
+    verify_program,
+)
+
+#: lazy (jax-touching) exports -> defining submodule
+_LAZY = {"capture": "capture", "record": "capture",
+         "AbstractTransport": "capture", "source_location": "capture"}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

@@ -1,0 +1,178 @@
+"""Capture mode: record channel programs without moving a byte.
+
+Inside :func:`capture`, the channel API becomes an abstract interpreter of
+itself (DESIGN.md §14):
+
+* every ``ChannelSpec.resolve()`` / ``get_transport()`` hands back an
+  :class:`AbstractTransport` — a backend whose steps account into the
+  capture ledger and return zeros, so ``jit(...).lower()`` traces the whole
+  program (channel opens, pushes, pops, transfers, pool claims) while **no
+  collective executes**;
+* every channel op records a :class:`~repro.analysis.ops.ChannelOp` into
+  the active :class:`~repro.analysis.ops.CaptureLedger` (the ``if
+  _capture.ACTIVE:`` guards in ``repro/channels`` mirror the zero-overhead
+  ``if obs.TRACING:`` tracing hooks);
+* ``Transport.tally`` — the single accounting funnel every *real* backend
+  reports through — is class-patched to count into ``ledger.real_steps``,
+  which must stay 0: the assertable no-comm-executed contract.
+
+The guards make capture strictly opt-in: when ``ACTIVE`` is False (always,
+unless a :func:`capture` block is running) the channel layer pays one
+module-attribute check per op and nothing else.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+from ..transport.base import Transport, tree_bytes
+from .ops import CaptureLedger, ChannelOp
+
+#: True while a :func:`capture` block is running (the channel layer's guard)
+ACTIVE = False
+
+#: the ledger the running capture records into (None outside capture)
+LEDGER: CaptureLedger | None = None
+
+#: the unpatched accounting funnel (bound at import, before any patching)
+_REAL_TALLY = Transport.tally
+
+#: directories whose frames are skipped when attributing a source location
+#: (the channel machinery itself is never the interesting line)
+_SKIP_DIRS = (
+    os.sep + os.path.join("repro", "analysis") + os.sep,
+    os.sep + os.path.join("repro", "channels") + os.sep,
+)
+
+
+def source_location(skip: int = 1) -> str | None:
+    """``file.py:line`` of the nearest caller outside the channel machinery
+    (repo-relative when under the working tree)."""
+    f = sys._getframe(skip)
+    while f is not None:
+        fn = f.f_code.co_filename
+        if not any(d in fn for d in _SKIP_DIRS):
+            rel = os.path.relpath(fn)
+            if not rel.startswith(".."):
+                fn = rel
+            return f"{fn}:{f.f_lineno}"
+        f = f.f_back
+    return None
+
+
+def _comm_name(comm) -> str:
+    """Cross-rank channel identity needs the communicator's identity; the
+    name plus the instance id separates two comms that share a name."""
+    return f"{getattr(comm, 'name', 'world')}#{id(comm):x}"
+
+
+def record(op: str, spec=None, **over):
+    """Record one channel op against the active ledger (no-op when no
+    capture is running — callers guard on ``ACTIVE`` anyway)."""
+    led = LEDGER
+    if led is None:
+        return
+    kw: dict = {}
+    if spec is not None:
+        comm = spec.comm
+        try:
+            tkey = spec.transport_key
+        except Exception:
+            tkey = None
+        kw = dict(
+            chan=led.chan_id(spec),
+            kind=spec.kind,
+            port=spec.port,
+            tag=spec.stats_tag,
+            comm=_comm_name(comm),
+            size=comm.size,
+            src=spec.src,
+            dst=spec.dst,
+            root=spec.root,
+            count=spec.count,
+            wire=spec.wire,
+            transport=tkey,
+            persistent=spec.persistent,
+        )
+    kw.update(over)
+    kw.setdefault("location", source_location(skip=2))
+    led.add(ChannelOp(op=op, **kw))
+
+
+@dataclass
+class AbstractTransport(Transport):
+    """The no-op backend capture substitutes for every real one.
+
+    Schedule-shaped: ``permute`` accounts one link step, ``p2p`` accounts
+    the chunk-pipelined ``n_chunks + hops - 1`` steps of the routed pipe —
+    the same trace-time cost formulae the real backends use — but every
+    step returns zeros instead of issuing a ``ppermute``.  Tallies land in
+    ``ledger.transport_steps`` (per tag), never in ``real_steps``.
+    """
+
+    name = "abstract"
+
+    def permute(self, x, comm, pairs):
+        import jax
+        import jax.numpy as jnp
+
+        self.account(x)
+        return jax.tree.map(jnp.zeros_like, x)
+
+    def p2p(self, x, *, src, dst, comm, n_chunks: int = 1):
+        import jax
+        import jax.numpy as jnp
+
+        if src == dst:
+            return x
+        hops = len(comm.route_table.path(src, dst)) - 1
+        self.tally(n_chunks + hops - 1, tree_bytes(x))
+        return jax.tree.map(jnp.zeros_like, x)
+
+    def tally(self, steps: int, nbytes: int):
+        led = LEDGER
+        if led is not None:
+            led.tally_abstract(self._tag, steps, nbytes)
+        _REAL_TALLY(self, steps, nbytes)  # per-instance stats stay coherent
+
+
+def _counting_tally(self, steps: int, nbytes: int):
+    """The :func:`capture`-time ``Transport.tally``: any *real* backend
+    stepping during capture is exactly what capture exists to prevent, so
+    it is counted (and asserted zero by the acceptance tests)."""
+    led = LEDGER
+    if led is not None and not isinstance(self, AbstractTransport):
+        led.real_steps += steps
+    _REAL_TALLY(self, steps, nbytes)
+
+
+@contextmanager
+def capture(size: int | None = None):
+    """Record every channel op under the block into a fresh ledger.
+
+    Trace the program (``jax.jit(...).lower(shapes...)``) inside the block;
+    nothing executes.  Not reentrant — the ledger is process-global, like
+    the obs tracer it mirrors.
+
+    >>> with capture() as led:
+    ...     jax.jit(step).lower(state_shape, batch_shape)
+    >>> assert led.real_steps == 0
+    >>> diags = verify_ledger(led)
+    """
+    global ACTIVE, LEDGER
+    assert not ACTIVE, "capture() blocks do not nest"
+    led = CaptureLedger()
+    if size is not None:
+        led.size = int(size)
+    prev_tally = Transport.tally
+    Transport.tally = _counting_tally
+    ACTIVE, LEDGER = True, led
+    try:
+        yield led
+    finally:
+        ACTIVE = False
+        LEDGER = None
+        Transport.tally = prev_tally

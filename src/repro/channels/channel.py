@@ -28,6 +28,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from ..analysis import capture as _capture
 from ..core.comm import Communicator, PortAllocator
 from ..obs import trace as obs
 from .spec import ChannelSpec
@@ -51,10 +52,13 @@ def _claim(spec: ChannelSpec, allocator) -> ChannelSpec:
     the opening trace is garbage-collected — unless the spec is
     ``persistent``, in which case the allocator holds the spec strongly and
     the claim survives until explicit close) and remember the allocator."""
-    if spec.port is None:
-        return spec
     alloc = allocator if allocator is not None else PORTS
     spec = spec.replace(allocator=alloc)
+    if spec.port is None:
+        # no claim to hold, but the allocator notes the channel so
+        # PortAllocator.claims() can report anonymous channels at all
+        alloc.note_anonymous(spec.comm, spec)
+        return spec
     alloc.claim(spec.comm, spec.port, owner=spec, persistent=spec.persistent)
     return spec
 
@@ -77,6 +81,8 @@ class _ChannelBase:
         if obs.TRACING:
             obs.emit("channel.close", tag=self.spec.stats_tag,
                      port=self.spec.port, channel_kind=self.spec.kind)
+        if _capture.ACTIVE:
+            _capture.record("close", self.spec)
         self.spec.release_port()
 
     def __enter__(self):
@@ -152,6 +158,8 @@ class Channel(_ChannelBase):
         if obs.TRACING:
             obs.emit("channel.push", tag=self.spec.stats_tag,
                      port=self.spec.port, src=self.spec.src)
+        if _capture.ACTIVE:
+            _capture.record("push", self.spec)
         r = self.spec.comm.rank()
         at_src = r == self.spec.src
         new_pipe = _mask_sel(
@@ -182,6 +190,8 @@ class Channel(_ChannelBase):
         if obs.TRACING:
             obs.emit("channel.pop", tag=spec.stats_tag, port=spec.port,
                      dst=spec.dst, hops=spec.hops)
+        if _capture.ACTIVE:
+            _capture.record("pop", spec)
         r = spec.comm.rank()
         pairs = spec.comm.path_perm(spec.path)
         t = spec.step_transport()
@@ -215,6 +225,8 @@ class Channel(_ChannelBase):
         pushes + pops, dispatched to the pipelined transfer engine."""
         spec = self.spec
         t, nc = self._resolve_transfer(x, n_chunks, "p2p")
+        if _capture.ACTIVE:
+            _capture.record("transfer", spec, dtype=str(x.dtype))
         if obs.TRACING:
             obs.emit("channel.transfer.start", tag=spec.stats_tag,
                      port=spec.port, src=spec.src, dst=spec.dst,
@@ -267,6 +279,8 @@ def open_channel(
         obs.emit("channel.open", tag=spec.stats_tag, port=spec.port,
                  channel_kind="p2p", src=src, dst=dst, count=count,
                  wire=wire)
+    if _capture.ACTIVE:
+        _capture.record("open", spec, dtype=str(jnp.dtype(dtype)))
     return Channel(
         spec=spec,
         pipe=_pvary(jnp.zeros(elem_shape, dtype), comm),

@@ -34,6 +34,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from ..analysis import capture as _capture
 from ..core.comm import Communicator, PortAllocator
 from ..obs import trace as obs
 from .channel import _ChannelBase, _claim, _mask_sel, _pvary, _tagged
@@ -109,6 +110,8 @@ class CollectiveChannel(_ChannelBase):
         if obs.TRACING:
             obs.emit("channel.push", tag=self.spec.stats_tag,
                      port=self.spec.port, channel_kind=kind)
+        if _capture.ACTIVE:
+            _capture.record("push", self.spec)
         P = self.spec.comm.size
         if kind in ("bcast", "reduce"):
             # consumption pointer of this rank's FIFO: the root/injector
@@ -146,6 +149,8 @@ class CollectiveChannel(_ChannelBase):
         if obs.TRACING:
             obs.emit("channel.pop", tag=self.spec.stats_tag,
                      port=self.spec.port, channel_kind=self.spec.kind)
+        if _capture.ACTIVE:
+            _capture.record("pop", self.spec)
         return getattr(self, f"_pop_{self.spec.kind}")()
 
     # bcast: pipelined chain, validity in-band ---------------------------
@@ -309,6 +314,8 @@ class CollectiveChannel(_ChannelBase):
         backend.  Extra kwargs forward to the underlying schedule
         (``bidir=``, the reduce ``op`` defaults to the spec's)."""
         spec = self.spec
+        if _capture.ACTIVE:
+            _capture.record("transfer", spec, dtype=str(x.dtype))
         if obs.TRACING:
             obs.emit("channel.transfer.start", tag=spec.stats_tag,
                      port=spec.port, channel_kind=spec.kind,
@@ -384,6 +391,8 @@ def _open(kind: str, comm: Communicator, *, count, root, port, elem_shape,
     if obs.TRACING:
         obs.emit("channel.open", tag=spec.stats_tag, port=spec.port,
                  channel_kind=kind, root=root, count=count, wire=wire)
+    if _capture.ACTIVE:
+        _capture.record("open", spec, dtype=str(jnp.dtype(dtype)))
     P = comm.size
     z = jnp.zeros
     if kind == "bcast":

@@ -28,6 +28,7 @@ releases every claim at engine shutdown via :meth:`ChannelPool.close`
 
 from __future__ import annotations
 
+from ..analysis import capture as _capture
 from ..core.comm import Communicator, PortAllocator
 from ..obs import trace as obs
 from .channel import PORTS, _claim
@@ -92,6 +93,8 @@ class ChannelPool:
             if obs.TRACING:
                 obs.emit("channel.open", tag=s.stats_tag, port=s.port,
                          channel_kind=kind, wire=s.wire, persistent=True)
+            if _capture.ACTIVE:
+                _capture.record("pool.open", s)
             self._specs[k] = s
         return s
 
@@ -102,6 +105,14 @@ class ChannelPool:
     def ports(self) -> dict[str, int]:
         return {tag: s.port for tag, s in self._specs.items()}
 
+    def claims(self) -> tuple[dict, ...]:
+        """The pool's live claims as the allocator sees them: the
+        :meth:`~repro.core.comm.PortAllocator.claims` rows whose owner is
+        one of this pool's specs (port-ordered).  Empty after close."""
+        own = {id(s) for s in self._specs.values()}
+        return tuple(r for r in self.allocator.claims(self.comm)
+                     if id(r["owner"]) in own)
+
     def __len__(self) -> int:
         return len(self._specs)
 
@@ -111,15 +122,21 @@ class ChannelPool:
     # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
-        """Release every persistent claim (idempotent).  This is the ONLY
-        way a persistent port comes back — trace exits never lapse it."""
+        """Release every persistent claim (idempotent — a second close is
+        a no-op, it can never release a later claimant's ports).  This is
+        the ONLY way a persistent port comes back — trace exits never
+        lapse it."""
+        if self.closed:
+            return
+        self.closed = True
         for s in self._specs.values():
             if obs.TRACING:
                 obs.emit("channel.close", tag=s.stats_tag, port=s.port,
                          channel_kind=s.kind, persistent=True)
+            if _capture.ACTIVE:
+                _capture.record("pool.close", s)
             s.release_port()
         self._specs.clear()
-        self.closed = True
 
     def __enter__(self) -> "ChannelPool":
         return self
@@ -127,3 +144,19 @@ class ChannelPool:
     def __exit__(self, *exc):
         self.close()
         return False
+
+    def __del__(self):
+        # a pool garbage-collected with live claims is a leak: nothing can
+        # ever release its persistent ports again.  Report it (the ft.*
+        # fault-tolerance event family) and recover the ports instead of
+        # dying silently — __del__ swallows everything else.
+        try:
+            if getattr(self, "closed", True) or not self._specs:
+                return
+            if obs.TRACING:
+                obs.emit("ft.leak", tag=self.prefix,
+                         ports=sorted(s.port for s in self._specs.values()),
+                         n_claims=len(self._specs))
+            self.close()
+        except Exception:
+            pass  # interpreter teardown: modules may already be gone

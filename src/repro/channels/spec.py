@@ -119,7 +119,17 @@ class ChannelSpec:
         String keys (and ``None``) resolve to a *fresh* instance per call —
         per-trace stats, and the packet backend's cross-trace reuse guard
         stays satisfied; a live Transport instance passes through (wrapped
-        in the compressed-link backend when ``wire="int8"``)."""
+        in the compressed-link backend when ``wire="int8"``).
+
+        Under :func:`repro.analysis.capture` every resolution — string
+        key, ``None`` *and* live instance — yields the abstract accounting
+        backend instead: this is the seam that makes capture-mode
+        verification run whole programs without moving a byte."""
+        import sys
+
+        cap = sys.modules.get("repro.analysis.capture")
+        if cap is not None and cap.ACTIVE:
+            return cap.AbstractTransport()
         from ..transport.base import Transport
         from ..transport.registry import get_transport
 
@@ -136,11 +146,18 @@ class ChannelSpec:
     def step_transport(self):
         """The instance the element-level push/pop pipeline drives: resolved
         once per spec (one open = one trace = one backend instance), so
-        per-channel counters accumulate in one place."""
-        cached = self.__dict__.get("_step_transport")
+        per-channel counters accumulate in one place.  Capture mode uses a
+        separate cache slot, so a spec resolved both inside and outside a
+        capture block never hands the wrong backend to either world."""
+        import sys
+
+        cap = sys.modules.get("repro.analysis.capture")
+        slot = ("_abstract_step_transport"
+                if cap is not None and cap.ACTIVE else "_step_transport")
+        cached = self.__dict__.get(slot)
         if cached is None:
             cached = self.resolve()
-            object.__setattr__(self, "_step_transport", cached)
+            object.__setattr__(self, slot, cached)
         return cached
 
     # -- lifecycle -----------------------------------------------------------

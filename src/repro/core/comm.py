@@ -150,6 +150,10 @@ class PortAllocator:
     #: id(comm) -> {port: owner weakref (transient) | owner object
     #: (persistent) | None (ownerless / permanent)}
     used: dict[int, dict] = field(default_factory=dict)
+    #: id(comm) -> [weakref to anonymous (port=None) channel specs]; no
+    #: claim is held, but :meth:`claims` reports them so diagnostics can
+    #: see anonymous channels at all (they lapse with their spec)
+    anonymous: dict[int, list] = field(default_factory=dict)
 
     def _ports(self, comm: Communicator) -> dict:
         key = id(comm)
@@ -216,3 +220,52 @@ class PortAllocator:
             sorted(p for p, entry in ports.items()
                    if self._owner_of(entry)[0])
         )
+
+    def note_anonymous(self, comm: Communicator, owner) -> None:
+        """Register an anonymous (``port=None``) channel owner, weakly.
+
+        Anonymous channels hold no claim — nothing to collide with — but
+        were invisible to every diagnostic surface; :meth:`claims` lists
+        them while their owning spec is alive."""
+        key = id(comm)
+        refs = self.anonymous.get(key)
+        if refs is None:
+            refs = self.anonymous[key] = []
+            weakref.finalize(comm, self.anonymous.pop, key, None)
+        refs[:] = [r for r in refs if r() is not None]  # prune the dead
+        refs.append(weakref.ref(owner))
+
+    def claims(self, comm: Communicator) -> tuple[dict, ...]:
+        """Structured snapshot of every live claim on ``comm`` — what the
+        smilint capture verifier and the pool introspection read.
+
+        One row per live claim, port-ordered, plus one trailing row per
+        live anonymous (``port=None``) channel:
+        ``{"port", "persistent", "anonymous", "tag", "kind", "owner"}``
+        (``tag``/``kind`` come off the owning ChannelSpec when there is
+        one; ownerless ``claim(comm, port)`` rows carry ``owner=None``)."""
+
+        def row(port, entry_persistent, anonymous, owner):
+            return {
+                "port": port,
+                "persistent": entry_persistent,
+                "anonymous": anonymous,
+                "tag": getattr(owner, "stats_tag",
+                               getattr(owner, "tag", None)),
+                "kind": getattr(owner, "kind", None),
+                "owner": owner,
+            }
+
+        rows = []
+        for port, entry in sorted(self.used.get(id(comm), {}).items()):
+            live, owner = self._owner_of(entry)
+            if not live:
+                continue
+            persistent = entry is not None and \
+                not isinstance(entry, weakref.ref)
+            rows.append(row(port, persistent, False, owner))
+        for ref in self.anonymous.get(id(comm), []):
+            owner = ref()
+            if owner is not None:
+                rows.append(row(None, False, True, owner))
+        return tuple(rows)

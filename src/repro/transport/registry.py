@@ -64,7 +64,18 @@ def is_transport_key(key: str) -> bool:
 
 
 def get_transport(name: str | None = None, **kw):
-    """New Transport instance for ``name`` (None -> DEFAULT_TRANSPORT)."""
+    """New Transport instance for ``name`` (None -> DEFAULT_TRANSPORT).
+
+    Under :func:`repro.analysis.capture` every key resolves to the
+    abstract accounting backend — the registry is the second seam (after
+    ``ChannelSpec.resolve``) that keeps capture-mode verification from
+    moving a single byte, covering call sites that name backends by
+    string (``resolve_transport``, the ``stream_*`` schedules)."""
+    import sys
+
+    cap = sys.modules.get("repro.analysis.capture")
+    if cap is not None and cap.ACTIVE:
+        return cap.AbstractTransport()
     _ensure_builtins()
     key = name or DEFAULT_TRANSPORT
     if key in _REGISTRY:

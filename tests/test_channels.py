@@ -255,6 +255,60 @@ def test_garbage_collected_channel_claim_lapses(ring8):
     again.close()
 
 
+def test_double_claim_inside_one_trace_raises(ring8):
+    """Two opens of one (comm, port) inside a single traced program must
+    collide at trace time — the second open happens while the first claim
+    is live in the very same abstract execution."""
+    mesh, comm = ring8
+    pa = PortAllocator()
+
+    def fn(v):
+        a = open_channel(comm, src=0, dst=1, port=4, allocator=pa)
+        b = open_channel(comm, src=0, dst=2, port=4, allocator=pa)
+        return (v + 0 * (a.pipe + b.pipe))[:1]
+
+    with pytest.raises(ValueError, match="port 4 already claimed"):
+        run_spmd(fn, mesh, P("x"), P("x"), jnp.zeros((8,), jnp.float32))
+
+
+def test_stale_double_close_after_later_claimant_keeps_claims_view(ring8):
+    """The claims() snapshot mirrors the stale-close rule: after a later
+    claimant takes the port, the stale closer's second close leaves the
+    live row (and its owner) untouched."""
+    _, comm = ring8
+    pa = PortAllocator()
+    a = open_channel(comm, src=0, dst=1, port=2, tag="first", allocator=pa)
+    a.close()
+    b = open_channel(comm, src=0, dst=1, port=2, tag="second", allocator=pa)
+    a.close()  # stale
+    rows = pa.claims(comm)
+    assert [r["port"] for r in rows] == [2]
+    assert rows[0]["tag"] == "second" and not rows[0]["persistent"]
+    b.close()
+    assert pa.claims(comm) == ()
+
+
+def test_persistent_claim_survives_del_and_gc_of_every_user(ring8):
+    """claim(persistent=True) is the serving lifecycle: the port stays
+    claimed after every channel (and local spec ref) dies, until an
+    explicit release — the opposite of the transient lapse above."""
+    _, comm = ring8
+    from repro.channels import ChannelPool
+
+    pa = PortAllocator()
+    pool = ChannelPool(comm, allocator=pa)
+    spec = pool.spec("decode.mlp")
+    port = spec.port
+    del spec
+    gc.collect()
+    assert pa.in_use(comm) == (port,)
+    assert [r["persistent"] for r in pa.claims(comm)] == [True]
+    with pytest.raises(ValueError):
+        pa.claim(comm, port)
+    pool.close()
+    assert pa.in_use(comm) == ()
+
+
 # ---------------------------------------------------------------------------
 # ChannelSpec: the single config carrier
 # ---------------------------------------------------------------------------
